@@ -1,0 +1,70 @@
+"""Paper Tables 4/5 (system accuracy by category), Table 6 (tree-family
+ablation), Table 7 (retrieval/browse ablation) on the synthetic temporal
+workload with exact gold labels.
+
+CSV rows:
+  acc_<system>,0,"overall=..;current=..;historical=..;..."
+  treefam_<combo>,0,"overall=.."
+  browse_<mode>,0,"overall=.."
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks.common import build_systems, default_workload, emit, fresh_memforest
+
+BROWSE_MODES = ["flat", "root-only", "emb", "emb+planner", "llm", "llm+planner"]
+TREE_FAMS = [
+    ("entity", "scene", "session"),
+    ("entity", "scene"),
+    ("entity", "session"),
+    ("scene", "session"),
+    ("session",),
+    ("scene",),
+    ("entity",),
+]
+
+
+def _by_category(system, queries, mode=None):
+    cats = defaultdict(lambda: [0, 0])
+    for q in queries:
+        r = system.query(q, mode=mode) if mode is not None else system.query(q)
+        ok = r.answer.strip().lower() == q.gold.strip().lower()
+        cats[q.qtype][0] += int(ok)
+        cats[q.qtype][1] += 1
+        cats["overall"][0] += int(ok)
+        cats["overall"][1] += 1
+    return {k: v[0] / v[1] for k, v in cats.items()}
+
+
+def run() -> None:
+    wl = default_workload()
+
+    # --- Tables 4/5 analogue: systems by category --------------------------
+    for name, mk in build_systems().items():
+        sys_ = mk()
+        for s in wl.sessions:
+            sys_.ingest_session(s)
+        cats = _by_category(sys_, wl.queries)
+        emit(f"acc_{name}", 0.0,
+             ";".join(f"{k}={v:.3f}" for k, v in sorted(cats.items())))
+
+    # --- Table 6: tree-family ablation --------------------------------------
+    for fams in TREE_FAMS:
+        mf = fresh_memforest(tree_families=fams)
+        for s in wl.sessions:
+            mf.ingest_session(s)
+        cats = _by_category(mf, wl.queries, mode="llm+planner")
+        emit(f"treefam_{'+'.join(fams)}", 0.0, f"overall={cats['overall']:.3f}")
+
+    # --- Table 7: browse-mode ablation ---------------------------------------
+    mf = fresh_memforest()
+    for s in wl.sessions:
+        mf.ingest_session(s)
+    for mode in BROWSE_MODES:
+        cats = _by_category(mf, wl.queries, mode=mode)
+        emit(f"browse_{mode}", 0.0, f"overall={cats['overall']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

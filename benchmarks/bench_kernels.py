@@ -1,0 +1,103 @@
+"""Kernel microbenchmarks: reference (XLA) wall time on CPU + interpret-mode
+correctness deltas. On real TPUs the same harness times the Pallas path.
+
+CSV: kernel_<name>,us_per_call,"max_err_vs_ref=..;shape=.."
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops
+
+
+def _bench(fn, *args, repeats=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def _err(a, b):
+    fa = np.asarray(jax.tree.leaves(a)[0], np.float32)
+    fb = np.asarray(jax.tree.leaves(b)[0], np.float32)
+    return float(np.max(np.abs(fa - fb)))
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    B, S, Hq, Hkv, D = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    t = _bench(ops.attention, q, k, v, impl="reference")
+    e = _err(ops.attention(q, k, v, impl="reference"),
+             ops.attention(q, k, v, impl="pallas_interpret", block_q=256, block_kv=256))
+    emit("kernel_flash_attention", t * 1e6, f"max_err_vs_ref={e:.2e};shape=B{B}xS{S}xH{Hq}xD{D}")
+
+    Smax = 4096
+    kc = jnp.asarray(rng.normal(size=(B, Smax, Hkv, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, Smax, Hkv, D)), jnp.float32)
+    qd = jnp.asarray(rng.normal(size=(B, Hq, D)), jnp.float32)
+    lens = jnp.asarray([Smax - 3], jnp.int32)
+    t = _bench(ops.decode_attention, qd, kc, vc, lens, impl="reference")
+    e = _err(ops.decode_attention(qd, kc, vc, lens, impl="reference"),
+             ops.decode_attention(qd, kc, vc, lens, impl="pallas_interpret", block_kv=512))
+    emit("kernel_decode_attention", t * 1e6, f"max_err_vs_ref={e:.2e};shape=S{Smax}")
+
+    Q, N, Dd, K = 8, 8192, 256, 10
+    qq = jnp.asarray(rng.normal(size=(Q, Dd)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(N, Dd)), jnp.float32)
+    t = _bench(ops.topk_sim, qq, kk, K, impl="reference")
+    r1 = ops.topk_sim(qq, kk, K, impl="reference")
+    r2 = ops.topk_sim(qq, kk, K, impl="pallas_interpret")
+    e = _err(r1[0], r2[0])
+    emit("kernel_topk_sim", t * 1e6, f"max_err_vs_ref={e:.2e};shape=Q{Q}xN{N}xK{K}")
+
+    P, Kk = 256, 8
+    ce = jnp.asarray(rng.normal(size=(P, Kk, Dd)), jnp.float32)
+    cm = jnp.asarray(rng.random((P, Kk)) > 0.3)
+    t = _bench(ops.tree_refresh, ce, cm, impl="reference")
+    e = _err(ops.tree_refresh(ce, cm, impl="reference"),
+             ops.tree_refresh(ce, cm, impl="pallas_interpret"))
+    emit("kernel_tree_refresh", t * 1e6, f"max_err_vs_ref={e:.2e};shape=P{P}xK{Kk}xD{Dd}")
+
+    B2, T, H, Kh, V2 = 1, 512, 4, 64, 64
+    r = jnp.asarray(rng.normal(size=(B2, T, H, Kh)) * .5, jnp.float32)
+    kx = jnp.asarray(rng.normal(size=(B2, T, H, Kh)) * .5, jnp.float32)
+    vx = jnp.asarray(rng.normal(size=(B2, T, H, V2)) * .5, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(B2, T, H, Kh)) * .5, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, Kh)) * .5, jnp.float32)
+    s0 = jnp.zeros((B2, H, Kh, V2), jnp.float32)
+    t = _bench(ops.rwkv6_scan, r, kx, vx, w, u, s0, impl="reference")
+    o1 = ops.rwkv6_scan(r, kx, vx, w, u, s0, impl="reference")
+    o2 = ops.rwkv6_scan(r, kx, vx, w, u, s0, impl="pallas_interpret")
+    emit("kernel_rwkv6_scan", t * 1e6,
+         f"max_err_vs_ref={_err(o1[0], o2[0]):.2e};shape=T{T}xH{H}xK{Kh}")
+
+    Pd, Nd = 64, 64
+    x = jnp.asarray(rng.normal(size=(B2, T, H, Pd)), jnp.float32)
+    dt = jnp.asarray(rng.random((B2, T, H)) * .5 + .01, jnp.float32)
+    A = -jnp.asarray(rng.random((H,)) + .1, jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B2, T, Nd)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(B2, T, Nd)), jnp.float32)
+    sm = jnp.zeros((B2, H, Pd, Nd), jnp.float32)
+    t = _bench(ops.mamba2_ssd, x, dt, A, Bm, C, sm, impl="reference")
+    y1 = ops.mamba2_ssd(x, dt, A, Bm, C, sm, impl="reference")
+    y2 = ops.mamba2_ssd(x, dt, A, Bm, C, sm, impl="pallas_interpret")
+    emit("kernel_mamba2_ssd", t * 1e6,
+         f"max_err_vs_ref={_err(y1[0], y2[0]):.2e};shape=T{T}xH{H}xP{Pd}xN{Nd}")
+
+
+if __name__ == "__main__":
+    run()

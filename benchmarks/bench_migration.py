@@ -1,0 +1,74 @@
+"""Paper Figure 5 + Table 10: migration merge vs sequential write on
+progressively combined memory instances.
+
+Sequential write replays every raw session through extraction — in a real
+deployment that is LLM work (the latency model of bench_write_path:
+T_CALL per sequential round + tokens/TOK_RATE). Migration merge reuses the
+already-materialized state: its only LLM work is the dirty-path summary
+refresh after the merge. Both modeled and CPU-measured times are reported;
+state-scale parity (Table 10) is checked from the same run.
+
+CSV: migration_N<k>,measured_mig_us,
+     "speedup_modeled=..;speedup_measured=..;facts_seq=..;facts_mig=..;trees_seq=..;trees_mig=.."
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import default_workload, fresh_memforest, emit
+from benchmarks.bench_write_path import T_CALL, TOK_RATE
+
+TOK_PER_SUMMARY = 100  # refresh call ~= one short summary generation
+
+
+def _build(sessions):
+    mf = fresh_memforest()
+    depth_sum = 0
+    for s in sessions:
+        st = mf.ingest_session(s)
+        depth_sum += st.llm_dependency_depth
+    return mf, depth_sum
+
+
+def run(max_n: int = 8) -> None:
+    # N independent "instances" (separate users): distinct seeds
+    instances = [default_workload(seed=100 + i, num_sessions=4, num_entities=3,
+                                  num_queries=1).sessions for i in range(max_n)]
+    prebuilt = [_build(ss)[0] for ss in instances]
+
+    for n in range(2, max_n + 1):
+        # sequential write: replay ALL sessions through the write path
+        t0 = time.perf_counter()
+        seq, seq_depth = _build([s for ss in instances[:n] for s in ss])
+        t_seq = time.perf_counter() - t0
+        seq_modeled = seq_depth * T_CALL + seq.write_stats.encoder_tokens / TOK_RATE
+
+        # migration merge: combine already-materialized states
+        t0 = time.perf_counter()
+        mig, _ = _build(instances[0])
+        mig_llm_rounds = 0
+        refreshes0 = mig.forest.summary_refreshes
+        for other in prebuilt[1:n]:
+            flush_before = mig.forest.flush_levels
+            mig.merge_from(other)
+            mig_llm_rounds += mig.forest.flush_levels - flush_before
+        t_mig = time.perf_counter() - t0
+        mig_refreshes = mig.forest.summary_refreshes - refreshes0
+        mig_modeled = (
+            4 * T_CALL  # instance-0 build rounds (bounded by tree height)
+            + mig_llm_rounds * T_CALL
+            + mig_refreshes * TOK_PER_SUMMARY / TOK_RATE
+        )
+
+        s_seq, s_mig = seq.scale_stats(), mig.scale_stats()
+        emit(
+            f"migration_N{n}", t_mig * 1e6,
+            f"speedup_modeled={seq_modeled/max(mig_modeled,1e-9):.2f}x;"
+            f"speedup_measured={t_seq/max(t_mig,1e-9):.2f}x;"
+            f"facts_seq={s_seq['facts']};facts_mig={s_mig['facts']};"
+            f"trees_seq={s_seq['trees']};trees_mig={s_mig['trees']}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Paper Table 3: query-time latency breakdown (retrieval vs answer) for the
+two MemForest operating points and the baselines.
+
+CSV: query_<system>,us_per_query,"retrieval_us=..;answer_us=..;acc=.."
+"""
+from __future__ import annotations
+
+from benchmarks.common import accuracy, build_systems, default_workload, emit, fresh_memforest
+
+
+def run() -> None:
+    wl = default_workload()
+
+    def bench(system, label, mode=None):
+        # warm
+        system.query(wl.queries[0]) if mode is None else system.query(wl.queries[0], mode=mode)
+        ret = ans = 0.0
+        correct = 0
+        for q in wl.queries:
+            r = system.query(q, mode=mode) if mode is not None else system.query(q)
+            ret += r.retrieval_s
+            ans += r.answer_s
+            correct += int(r.answer.strip().lower() == q.gold.strip().lower())
+        n = len(wl.queries)
+        emit(f"query_{label}", (ret + ans) / n * 1e6,
+             f"retrieval_us={ret/n*1e6:.0f};answer_us={ans/n*1e6:.0f};"
+             f"acc={correct/n:.3f}")
+
+    mf = fresh_memforest()
+    for s in wl.sessions:
+        mf.ingest_session(s)
+    bench(mf, "memforest_planner", mode="llm+planner")
+    bench(mf, "memforest_emb", mode="emb")
+
+    # batched serving path (beyond-paper): one encoder forward + one fused
+    # topk_sim across the whole query batch
+    import time as _t
+    mf.query_batch(wl.queries[:4], mode="emb")  # warm
+    t0 = _t.perf_counter()
+    res = mf.query_batch(wl.queries, mode="emb")
+    dt = _t.perf_counter() - t0
+    correct = sum(int(r.answer.strip().lower() == q.gold.strip().lower())
+                  for r, q in zip(res, wl.queries))
+    emit("query_memforest_emb_batched", dt / len(wl.queries) * 1e6,
+         f"batch={len(wl.queries)};acc={correct/len(wl.queries):.3f}")
+
+    for name, mk in build_systems().items():
+        if name == "memforest":
+            continue
+        sys_ = mk()
+        for s in wl.sessions:
+            sys_.ingest_session(s)
+        bench(sys_, name)
+
+
+if __name__ == "__main__":
+    run()

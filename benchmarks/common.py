@@ -1,0 +1,62 @@
+"""Shared benchmark utilities: builders, timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+from repro.config import MemForestConfig
+from repro.core.baselines import ALL_BASELINES
+from repro.core.encoder import HashingEncoder
+from repro.core.memforest import MemForestSystem
+from repro.data.synthetic import Workload, make_workload
+
+EMB_DIM = 256
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def fresh_memforest(**cfg_kw) -> MemForestSystem:
+    cfg = MemForestConfig(**cfg_kw)
+    return MemForestSystem(cfg, HashingEncoder(dim=cfg.embed_dim))
+
+
+def fresh_baseline(name: str):
+    return ALL_BASELINES[name](HashingEncoder(dim=EMB_DIM))
+
+
+def build_systems() -> Dict[str, Callable[[], object]]:
+    out: Dict[str, Callable[[], object]] = {"memforest": fresh_memforest}
+    for name in ALL_BASELINES:
+        out[name] = (lambda n=name: fresh_baseline(n))
+    return out
+
+
+def default_workload(seed: int = 1, **kw) -> Workload:
+    base = dict(num_entities=8, num_sessions=14, transitions_per_entity=4,
+                num_queries=60, seed=seed)
+    base.update(kw)
+    return make_workload(**base)
+
+
+def accuracy(system, queries, *, mode=None, final_topk: int = 6) -> float:
+    correct = 0
+    for q in queries:
+        if mode is not None:
+            r = system.query(q, mode=mode, final_topk=final_topk)
+        else:
+            r = system.query(q, final_topk=final_topk)
+        correct += int(r.answer.strip().lower() == q.gold.strip().lower())
+    return correct / max(len(queries), 1)
+
+
+def time_fn(fn: Callable, *, repeats: int = 3) -> float:
+    """Median wall seconds."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

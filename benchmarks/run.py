@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Prints ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
+  bench_write_path     Table 1 + Table 2   (write latency / tokens / depth)
+  bench_query_latency  Table 3             (retrieval vs answer split)
+  bench_accuracy       Tables 4,5,6,7      (accuracy + ablations)
+  bench_migration      Figure 5 + Table 10 (migration merge)
+  bench_tree_scaling   Figure 6a-e         (lazy refresh, build, parallel, k)
+  bench_chunk_sweep    Table 8             (extraction operating point)
+  bench_kernels        (kernel layer)      (per-kernel µs + ref deltas)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_accuracy,
+    bench_chunk_sweep,
+    bench_kernels,
+    bench_migration,
+    bench_query_latency,
+    bench_tree_scaling,
+    bench_write_path,
+)
+
+SUITES = {
+    "write_path": bench_write_path.run,
+    "query_latency": bench_query_latency.run,
+    "accuracy": bench_accuracy.run,
+    "migration": bench_migration.run,
+    "tree_scaling": bench_tree_scaling.run,
+    "chunk_sweep": bench_chunk_sweep.run,
+    "kernels": bench_kernels.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            SUITES[name]()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+        print(f"# suite {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

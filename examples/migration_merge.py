@@ -1,0 +1,54 @@
+"""Lifecycle maintenance demo: migration merge vs sequential write, plus
+targeted deletion (paper §5.6, Figure 5).
+
+    PYTHONPATH=src python examples/migration_merge.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+from repro.config import MemForestConfig
+from repro.core.memforest import MemForestSystem
+from repro.data.synthetic import make_workload
+
+
+def build(sessions):
+    mf = MemForestSystem(MemForestConfig())
+    for s in sessions:
+        mf.ingest_session(s)
+    return mf
+
+
+# two independently-built memory instances (e.g. two assistants' stores)
+wa = make_workload(num_entities=3, num_sessions=5, num_queries=1, seed=11)
+wb = make_workload(num_entities=3, num_sessions=5, num_queries=1, seed=22)
+
+print("building instance A and B independently ...")
+a = build(wa.sessions)
+b = build(wb.sessions)
+print("A:", a.scale_stats())
+print("B:", b.scale_stats())
+
+# migration merge: NO raw-session replay
+t0 = time.perf_counter()
+stats = a.merge_from(b)
+t_merge = time.perf_counter() - t0
+print(f"\nmigration merge in {t_merge*1e3:.0f}ms: {stats}")
+print("merged:", a.scale_stats())
+
+# sequential-write reference
+t0 = time.perf_counter()
+seq = build(wa.sessions + wb.sessions)
+t_seq = time.perf_counter() - t0
+print(f"sequential rebuild in {t_seq*1e3:.0f}ms "
+      f"-> migration speedup {t_seq/t_merge:.1f}x")
+print("sequential:", seq.scale_stats())
+
+# targeted deletion: only affected paths refresh
+sid = wa.sessions[0].session_id
+before = a.forest.summary_refreshes
+d = a.delete_session(sid)
+print(f"\ndeleted session {sid}: {d} "
+      f"({a.forest.summary_refreshes - before} summary refreshes)")
+print("after delete:", a.scale_stats())

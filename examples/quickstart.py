@@ -1,0 +1,52 @@
+"""Quickstart: build agent memory from a conversation stream, then query it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.config import MemForestConfig
+from repro.core.memforest import MemForestSystem
+from repro.core.types import Query, Session, Turn
+
+# --- the paper's running example (§2.3.3) -----------------------------------
+sessions = [
+    Session("s1", [
+        Turn("user", "Bob lives in Boston as of January 2023.", 36.0, 0),
+        Turn("assistant", "Noted, thanks for sharing.", 36.0, 1),
+        Turn("user", "Bob moved from Boston to Davis in May 2023.", 40.0, 2),
+        Turn("assistant", "Got it.", 40.0, 3),
+    ]),
+    Session("s2", [
+        Turn("user", "The weather has been quite nice lately.", 50.0, 0),
+        Turn("assistant", "Indeed it has.", 50.0, 1),
+        Turn("user", "Bob moved from Davis to Miami in July 2024.", 54.0, 2),
+        Turn("assistant", "Understood.", 54.0, 3),
+    ]),
+    Session("s3", [
+        Turn("user", "Bob's favorite thing is green tea as of August 2024.", 56.0, 0),
+        Turn("assistant", "Noted.", 56.0, 1),
+    ]),
+]
+
+mf = MemForestSystem(MemForestConfig())
+for s in sessions:
+    stats = mf.ingest_session(s)
+    print(f"ingested {s.session_id}: +{stats.facts_written} facts, "
+          f"dependency depth {stats.llm_dependency_depth}")
+
+print("\nmemory state:", mf.scale_stats())
+
+queries = [
+    Query("Where does Bob live now?", "current", "Bob", "residence"),
+    Query("Where did Bob live before moving to Miami?", "historical",
+          "Bob", "residence", anchor_value="Miami"),
+    Query("When did Bob move to Miami?", "transition_time",
+          "Bob", "residence", anchor_value="Miami"),
+    Query("What was the first place Bob lived in?", "multi_session",
+          "Bob", "residence"),
+]
+print()
+for q in queries:
+    r = mf.query(q)
+    print(f"Q: {q.text}\nA: {r.answer}   (evidence: {r.evidence[0][:60]}...)\n")

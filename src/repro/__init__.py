@@ -1,0 +1,2 @@
+"""repro: MemForest on JAX/TPU — write-efficient temporal agent memory framework."""
+__version__ = "0.1.0"

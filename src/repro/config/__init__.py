@@ -1,0 +1,15 @@
+from repro.config.base import (
+    ModelConfig,
+    MeshConfig,
+    TrainConfig,
+    MemForestConfig,
+    ShapeConfig,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MeshConfig",
+    "TrainConfig",
+    "MemForestConfig",
+    "ShapeConfig",
+]

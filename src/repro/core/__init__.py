@@ -1,0 +1,3 @@
+from repro.core.memforest import MemForestSystem  # noqa: F401
+from repro.core.forest import Forest  # noqa: F401
+from repro.core.memtree import TreeArena  # noqa: F401

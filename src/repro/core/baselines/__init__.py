@@ -1,0 +1,13 @@
+from repro.core.baselines.mem0_like import Mem0Like
+from repro.core.baselines.memoryos_like import MemoryOSLike
+from repro.core.baselines.evermem_like import EverMemLike
+from repro.core.baselines.lightmem_like import LightMemLike
+from repro.core.baselines.mempalace_like import MemPalaceLike
+
+ALL_BASELINES = {
+    "mem0": Mem0Like,
+    "memoryos": MemoryOSLike,
+    "evermem": EverMemLike,
+    "lightmem": LightMemLike,
+    "mempalace": MemPalaceLike,
+}

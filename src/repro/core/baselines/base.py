@@ -1,0 +1,100 @@
+"""Shared backend interface + cost accounting for baseline memory systems.
+
+Each baseline reproduces the WRITE CRITICAL PATH CLASS of its reference
+system (paper Table 1 / Appendix B). "LLM work" is an encoder forward with
+the same dependency structure as the original: calls on a dependency chain
+use `sequential=True` (one forward per call — serialization is real
+wall-clock here), independent calls are batched.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.retrieval import answer_query
+from repro.core.types import CanonicalFact, Query, QueryResult, Session, WriteStats
+from repro.data import templates as T
+from repro.kernels import ops
+
+
+class MemoryBackend:
+    name = "base"
+
+    def __init__(self, encoder):
+        self.encoder = encoder
+        self.write_stats = WriteStats()
+
+    def ingest_session(self, session: Session) -> WriteStats:
+        raise NotImplementedError
+
+    def query(self, q: Query, final_topk: int = 10) -> QueryResult:
+        raise NotImplementedError
+
+    def _begin(self):
+        return time.perf_counter(), self.encoder.stats.tokens, self.encoder.stats.calls
+
+    def _end(self, t0, tok0, call0, depth: int, facts: int) -> WriteStats:
+        s = WriteStats(
+            wall_s=time.perf_counter() - t0,
+            encoder_tokens=self.encoder.stats.tokens - tok0,
+            encoder_calls=self.encoder.stats.calls - call0,
+            llm_dependency_depth=depth,
+            facts_written=facts,
+        )
+        self.write_stats.add(s)
+        return s
+
+
+class FactStore:
+    """Flat embedding-indexed fact store shared by several baselines."""
+
+    def __init__(self, dim: int):
+        self.dim = dim
+        self.facts: List[CanonicalFact] = []
+        self.emb = np.zeros((0, dim), np.float32)
+        self.alive: List[bool] = []
+
+    def add(self, fact: CanonicalFact, emb: np.ndarray) -> int:
+        fact.fact_id = len(self.facts)
+        self.facts.append(fact)
+        self.alive.append(True)
+        if fact.fact_id >= self.emb.shape[0]:
+            grow = max(64, self.emb.shape[0])
+            self.emb = np.concatenate([self.emb, np.zeros((grow, self.dim), np.float32)])
+        self.emb[fact.fact_id] = emb
+        fact.emb = emb
+        return fact.fact_id
+
+    def topk(self, q_emb: np.ndarray, k: int) -> List[CanonicalFact]:
+        n = len(self.facts)
+        if n == 0:
+            return []
+        # capacity-padded matrix + runtime valid count: the jit-compile set
+        # stays O(log N) as the store grows
+        vals, idx = ops.topk_sim(
+            jnp.asarray(q_emb[None]), jnp.asarray(self.emb), min(k, n),
+            num_valid=n,
+        )
+        out = []
+        for i in np.asarray(idx[0]):
+            if i >= 0 and self.alive[int(i)]:
+                out.append(self.facts[int(i)])
+        return out
+
+    @property
+    def size(self) -> int:
+        return sum(self.alive)
+
+
+def turns_to_candidates(session: Session) -> List[Tuple[int, str, float, List]]:
+    """(turn_idx, text, ts, parsed candidates) for user turns."""
+    out = []
+    for i, t in enumerate(session.turns):
+        if t.role != "user":
+            continue
+        cands = T.parse_statement(t.text, (session.session_id, i))
+        out.append((i, t.text, t.ts, cands))
+    return out

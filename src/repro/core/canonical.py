@@ -1,0 +1,77 @@
+"""Write path stage 2: canonical fact consolidation (paper §4.1).
+
+Parallel chunk extraction fragments evidence (overlapping chunks re-state the
+same fact); canonicalization repairs that WITHOUT reading accumulated memory
+state: candidates are normalized, exact-key duplicates merged, and near-
+duplicates collapsed by embedding similarity within the batch and against
+the existing fact store (same subject+attribute only, via topk_sim).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.forest import Forest
+from repro.core.types import CanonicalFact, RawCandidate
+
+
+def _norm(s: str) -> str:
+    return " ".join(s.strip().lower().split())
+
+
+def canonicalize(
+    candidates: List[RawCandidate],
+    embs: Optional[np.ndarray],
+    forest: Forest,
+    sim_threshold: float = 0.92,
+) -> List[CanonicalFact]:
+    """Returns the NEW canonical facts (already registered in the forest's
+    fact store). Duplicates merge their source references instead."""
+    new_facts: List[CanonicalFact] = []
+    batch_seen = {}
+
+    # existing-key lookup (persistent state read, host-side hash — not an
+    # LLM call; this is exactly what makes the write path state-size-free)
+    existing = {}
+    for f in forest.facts:
+        if forest.fact_alive[f.fact_id]:
+            existing[(_norm(f.subject), _norm(f.attribute), _norm(f.value), round(f.ts, 1))] = f
+
+    for i, c in enumerate(candidates):
+        key = (_norm(c.subject), _norm(c.attribute), _norm(c.value), round(c.ts, 1))
+        if key in batch_seen:
+            batch_seen[key].sources.append(c.source)
+            continue
+        if key in existing:
+            existing[key].sources.append(c.source)
+            continue
+        fact = CanonicalFact(
+            fact_id=-1,
+            text=c.text,
+            subject=c.subject.strip(),
+            attribute=c.attribute.strip(),
+            value=c.value.strip(),
+            ts=c.ts,
+            prev_value=c.prev_value,
+            sources=[c.source],
+            emb=embs[i] if embs is not None else None,
+        )
+        # embedding near-duplicate check within subject+attribute
+        dup = None
+        if embs is not None:
+            for nf in new_facts:
+                if (_norm(nf.subject), _norm(nf.attribute)) == key[:2] and \
+                        float(nf.emb @ fact.emb) >= sim_threshold and \
+                        _norm(nf.value) == key[2]:
+                    dup = nf
+                    break
+        if dup is not None:
+            dup.sources.append(c.source)
+            continue
+        batch_seen[key] = fact
+        new_facts.append(fact)
+
+    for f in new_facts:
+        forest.add_fact(f)
+    return new_facts

@@ -1,0 +1,166 @@
+"""Embedding encoders for the memory substrate.
+
+HashingEncoder — deterministic, CPU-fast, jitted: token/bigram hashing into a
+fixed random projection. Used by benchmarks so write-path timings measure the
+*system* (batching, dependency structure), with a realistic per-call forward
+cost model.
+
+ModelEncoder — a zoo LM as the builder backbone: tokenize, run the trunk,
+mean-pool. Used by examples/serve_memforest.py with a small dense model —
+the same code path a production deployment would use with Qwen3 (the paper's
+builder).
+
+Both count calls and tokens so benchmarks can report Table-2-style cost.
+"""
+from __future__ import annotations
+
+import functools
+import re
+import zlib
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _stable_hash(s: str) -> int:
+    """Process-stable string hash (python's hash() is salted per process)."""
+    return zlib.crc32(s.encode())
+
+_TOKEN_RE = re.compile(r"[a-z0-9]+")
+_HASH_BUCKETS = 8192
+# high-frequency glue words contribute almost nothing to a trained embedding
+# model's similarity; the hashing stand-in drops them outright.
+_STOP = frozenset(
+    "a an the of in on at to as is was are were did does do now then it this "
+    "that i you he she we they my your his her what where when which who".split()
+)
+
+
+def _tokenize(text: str) -> List[int]:
+    toks = [t for t in _TOKEN_RE.findall(text.lower()) if t not in _STOP]
+    ids = []
+    for i, t in enumerate(toks):
+        ids.append(_stable_hash(t) % _HASH_BUCKETS)
+        if i + 1 < len(toks):
+            ids.append(_stable_hash(t + "_" + toks[i + 1]) % _HASH_BUCKETS)
+    return ids or [0]
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def _project(counts: jax.Array, table: jax.Array, dim: int) -> jax.Array:
+    """counts: (B, BUCKETS) sparse-ish count vectors -> (B, dim) normalized."""
+    h = jnp.tanh(counts @ table)
+    n = jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6
+    return h / n
+
+
+class EncoderStats:
+    def __init__(self):
+        self.calls = 0          # model invocations (a batch = 1 call)
+        self.sequential_calls = 0  # calls that were on a dependency chain
+        self.tokens = 0
+        self.texts = 0
+
+    def reset(self):
+        self.__init__()
+
+
+class HashingEncoder:
+    """Deterministic hashing encoder with LLM-like cost accounting."""
+
+    def __init__(self, dim: int = 256, seed: int = 0, max_batch: int = 1024):
+        self.dim = dim
+        rng = np.random.default_rng(seed)
+        self._table = jnp.asarray(
+            rng.normal(size=(_HASH_BUCKETS, dim)) / np.sqrt(dim), jnp.float32
+        )
+        self.stats = EncoderStats()
+        self.max_batch = max_batch
+
+    def encode(self, texts: Sequence[str], *, sequential: bool = False) -> np.ndarray:
+        """Batched encode. `sequential=True` marks calls that sit on a write
+        dependency chain (baselines' state-dependent updates) — they are
+        executed one-by-one to reproduce the serialization honestly."""
+        if not texts:
+            return np.zeros((0, self.dim), np.float32)
+        if sequential:
+            outs = [self._encode_batch([t]) for t in texts]
+            self.stats.sequential_calls += len(texts)
+            return np.concatenate(outs, axis=0)
+        outs = []
+        for i in range(0, len(texts), self.max_batch):
+            outs.append(self._encode_batch(texts[i:i + self.max_batch]))
+        return np.concatenate(outs, axis=0)
+
+    def _encode_batch(self, texts: Sequence[str]) -> np.ndarray:
+        n = len(texts)
+        # pad batch to a power-of-two bucket: bounded jit-compile set
+        cap = 1
+        while cap < n:
+            cap *= 2
+        counts = np.zeros((cap, _HASH_BUCKETS), np.float32)
+        ntok = 0
+        for i, t in enumerate(texts):
+            ids = _tokenize(t)
+            ntok += len(ids)
+            np.add.at(counts[i], ids, 1.0)
+        self.stats.calls += 1
+        self.stats.tokens += ntok
+        self.stats.texts += n
+        out = _project(jnp.asarray(counts), self._table, self.dim)
+        return np.asarray(out)[:n]
+
+    def encode_one(self, text: str) -> np.ndarray:
+        return self.encode([text])[0]
+
+
+class ModelEncoder:
+    """Zoo-LM-backed encoder: trunk forward + masked mean-pool."""
+
+    def __init__(self, cfg, params, tokenizer, max_len: int = 128):
+        from repro.models import get_model  # lazy: avoids cycle
+        from repro.models import transformer as T
+        from repro.models import layers as L
+
+        self.cfg = cfg
+        self.params = params
+        self.tok = tokenizer
+        self.max_len = max_len
+        self.dim = cfg.d_model
+        self.stats = EncoderStats()
+
+        def pooled(params, tokens, mask):
+            x = params["embed"][tokens]
+            h, _ = T.trunk(params, cfg, x, jnp.arange(tokens.shape[1])[None, :])
+            m = mask[..., None].astype(h.dtype)
+            s = jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+            n = jnp.linalg.norm(s.astype(jnp.float32), axis=-1, keepdims=True) + 1e-6
+            return (s.astype(jnp.float32) / n)
+
+        self._pooled = jax.jit(pooled)
+
+    def encode(self, texts: Sequence[str], *, sequential: bool = False) -> np.ndarray:
+        if not texts:
+            return np.zeros((0, self.dim), np.float32)
+        if sequential:
+            self.stats.sequential_calls += len(texts)
+            return np.concatenate([self._fwd([t]) for t in texts], axis=0)
+        return self._fwd(list(texts))
+
+    def _fwd(self, texts: List[str]) -> np.ndarray:
+        ids = [self.tok.encode(t)[: self.max_len] for t in texts]
+        L = max(len(i) for i in ids)
+        toks = np.zeros((len(ids), L), np.int32)
+        mask = np.zeros((len(ids), L), np.float32)
+        for i, seq in enumerate(ids):
+            toks[i, : len(seq)] = seq
+            mask[i, : len(seq)] = 1.0
+        self.stats.calls += 1
+        self.stats.tokens += int(mask.sum())
+        self.stats.texts += len(texts)
+        return np.asarray(self._pooled(self.params, jnp.asarray(toks), jnp.asarray(mask)))
+
+    def encode_one(self, text: str) -> np.ndarray:
+        return self.encode([text])[0]

@@ -1,0 +1,117 @@
+"""Write path stage 1: parallel chunk extraction + cell materialization
+(paper §4.1).
+
+Sessions are partitioned into fixed-size b-turn chunks (Eq. 5; default b=2,
+the Appendix-C operating point). Chunks are *independent*: the whole
+session's chunks are embedded in ONE batched encoder forward — the TPU-native
+form of the paper's concurrent extraction calls (DESIGN.md §3). The
+dependency depth of extraction is therefore 1, vs O(M) for serialized
+baselines.
+
+An LLM output-budget constraint is modeled: each extraction call returns at
+most `max_facts_per_call` candidates (surplus statements in oversized chunks
+are dropped) — this is what degrades Ent-GR at large chunk sizes in the
+paper's Table 8, and benchmarks/bench_chunk_sweep.py reproduces it.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+from repro.core.types import DialogueCell, RawCandidate, Session, WriteStats
+from repro.data import templates as T
+
+DEFAULT_MAX_FACTS_PER_CALL = 6
+
+
+def chunk_session(session: Session, b: int) -> List[Tuple[int, str, float]]:
+    """Partition into ceil(n/b) chunks of b turns: (chunk_idx, text, ts)."""
+    chunks = []
+    turns = session.turns
+    for j in range(0, len(turns), b):
+        grp = turns[j:j + b]
+        text = " ".join(f"[{t.role}] {t.text}" for t in grp)
+        chunks.append((j // b, text, grp[0].ts))
+    return chunks
+
+
+def extract_candidates(
+    chunk_text: str,
+    source: Tuple[str, int],
+    max_facts: int = DEFAULT_MAX_FACTS_PER_CALL,
+) -> List[RawCandidate]:
+    """One extraction call (deterministic LLM stand-in). Output budget capped
+    at `max_facts` candidates — surplus is dropped (recency-last)."""
+    cands = T.parse_statement(chunk_text, source)
+    return cands[:max_facts]
+
+
+class ParallelExtractor:
+    """Batched (= parallel) chunk extraction."""
+
+    def __init__(self, encoder, chunk_turns: int = 2,
+                 max_facts_per_call: int = DEFAULT_MAX_FACTS_PER_CALL,
+                 concurrency: int = 64):
+        self.encoder = encoder
+        self.b = chunk_turns
+        self.max_facts = max_facts_per_call
+        self.concurrency = concurrency
+
+    def extract_session(self, session: Session):
+        """Returns (candidates, cells, stats). One batched encode for chunk
+        cells + one for candidate texts: dependency depth 1."""
+        t0 = time.perf_counter()
+        chunks = chunk_session(session, self.b)
+        texts = [c[1] for c in chunks]
+        embs = self.encoder.encode(texts)             # parallel: one batch
+        cells = [
+            DialogueCell(-1, session.session_id, idx, text, ts, embs[i])
+            for i, (idx, text, ts) in enumerate(chunks)
+        ]
+        candidates: List[RawCandidate] = []
+        for idx, text, ts in chunks:
+            candidates.extend(
+                extract_candidates(text, (session.session_id, idx), self.max_facts)
+            )
+        fact_embs = (
+            self.encoder.encode([c.text for c in candidates])
+            if candidates else None
+        )
+        stats = WriteStats(
+            wall_s=time.perf_counter() - t0,
+            llm_dependency_depth=1,
+            facts_written=len(candidates),
+        )
+        return candidates, fact_embs, cells, stats
+
+
+class SequentialExtractor:
+    """Serialized extraction (what a single LLM pass over the session looks
+    like) — used as the ablation/baseline cost model."""
+
+    def __init__(self, encoder, chunk_turns: int = 2,
+                 max_facts_per_call: int = DEFAULT_MAX_FACTS_PER_CALL):
+        self.encoder = encoder
+        self.b = chunk_turns
+        self.max_facts = max_facts_per_call
+
+    def extract_session(self, session: Session):
+        t0 = time.perf_counter()
+        chunks = chunk_session(session, self.b)
+        cells, candidates = [], []
+        for idx, text, ts in chunks:
+            emb = self.encoder.encode([text], sequential=True)[0]  # one-by-one
+            cells.append(DialogueCell(-1, session.session_id, idx, text, ts, emb))
+            candidates.extend(
+                extract_candidates(text, (session.session_id, idx), self.max_facts)
+            )
+        fact_embs = (
+            self.encoder.encode([c.text for c in candidates])
+            if candidates else None
+        )
+        stats = WriteStats(
+            wall_s=time.perf_counter() - t0,
+            llm_dependency_depth=len(chunks),
+            facts_written=len(candidates),
+        )
+        return candidates, fact_embs, cells, stats

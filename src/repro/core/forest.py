@@ -1,0 +1,230 @@
+"""Forest: the shared memory substrate (paper §3.1) + batched lazy refresh
+(Algorithm 1).
+
+Persistent state (source of truth): canonical facts, dialogue cells, scope
+assignments, MemTree structure, placement maps, session registry.
+Derived artifacts: interval summaries, node embeddings, root-index rows,
+fact-index rows — regenerated selectively from dirty paths.
+
+`flush()` is Algorithm 1 lines 9-22: dirty nodes are collected by level
+across ALL dirty trees, and each level is refreshed in ONE batched
+`tree_refresh` kernel call — the paper's same-level/cross-tree parallelism
+mapped onto the TPU batch dimension. The dependent depth is the max dirty
+level (= deepest affected tree path), not the number of touched paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Set, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import MemForestConfig
+from repro.core.memtree import TreeArena
+from repro.core.types import CanonicalFact, DialogueCell
+from repro.kernels import ops
+
+
+class Forest:
+    def __init__(self, config: MemForestConfig, kernel_impl: str = "reference"):
+        self.config = config
+        self.kernel_impl = kernel_impl
+        self.trees: Dict[str, TreeArena] = {}
+        self._tree_order: List[str] = []          # tree_id -> scope_key
+        self.facts: List[CanonicalFact] = []
+        self.fact_emb = np.zeros((0, config.embed_dim), np.float32)
+        self.fact_alive: List[bool] = []
+        self.cells: List[DialogueCell] = []
+        # placement: ("fact"|"cell", item_id) -> [(scope_key, node_id)]
+        self.placement: Dict[Tuple[str, int], List[Tuple[str, int]]] = {}
+        self.session_registry: Dict[str, Dict[str, List[int]]] = {}
+        # scene clustering state
+        self.scene_centroids = np.zeros((0, config.embed_dim), np.float32)
+        self.scene_counts: List[int] = []
+        self.dirty_trees: Set[str] = set()
+        # derived: root index
+        self._root_matrix = np.zeros((0, config.embed_dim), np.float32)
+        # counters (benchmarks read these)
+        self.summary_refreshes = 0
+        self.flush_levels = 0
+        self.flush_calls = 0
+
+    # ------------------------------------------------------------------
+    # persistent-state writes
+    # ------------------------------------------------------------------
+    def get_tree(self, scope_key: str, kind: str) -> TreeArena:
+        t = self.trees.get(scope_key)
+        if t is None:
+            t = TreeArena(len(self._tree_order), scope_key, kind,
+                          self.config.branching_factor, self.config.embed_dim)
+            self.trees[scope_key] = t
+            self._tree_order.append(scope_key)
+            if len(self._tree_order) > self._root_matrix.shape[0]:
+                grow = max(8, self._root_matrix.shape[0])
+                self._root_matrix = np.concatenate(
+                    [self._root_matrix, np.zeros((grow, self.config.embed_dim), np.float32)]
+                )
+        return t
+
+    def add_fact(self, fact: CanonicalFact) -> int:
+        fact.fact_id = len(self.facts)
+        self.facts.append(fact)
+        self.fact_alive.append(True)
+        if fact.fact_id >= self.fact_emb.shape[0]:
+            grow = max(64, self.fact_emb.shape[0])
+            self.fact_emb = np.concatenate(
+                [self.fact_emb, np.zeros((grow, self.config.embed_dim), np.float32)]
+            )
+        self.fact_emb[fact.fact_id] = fact.emb
+        sid = fact.sources[0][0] if fact.sources else ""
+        self.session_registry.setdefault(sid, {"facts": [], "cells": []})["facts"].append(fact.fact_id)
+        return fact.fact_id
+
+    def add_cell(self, cell: DialogueCell) -> int:
+        cell.cell_id = len(self.cells)
+        self.cells.append(cell)
+        self.session_registry.setdefault(cell.session_id, {"facts": [], "cells": []})["cells"].append(cell.cell_id)
+        return cell.cell_id
+
+    def insert_item(self, scope_key: str, kind: str, item_kind: str,
+                    item_id: int, ts: float, emb: np.ndarray, text: str) -> int:
+        tree = self.get_tree(scope_key, kind)
+        leaf = tree.insert_leaf(item_id if item_kind == "fact" else -item_id - 1, ts, emb, text)
+        self.placement.setdefault((item_kind, item_id), []).append((scope_key, leaf))
+        self.dirty_trees.add(scope_key)
+        return leaf
+
+    # ------------------------------------------------------------------
+    # lazy refresh (Algorithm 1) — level-parallel, batched across trees
+    # ------------------------------------------------------------------
+    def flush(self, *, level_parallel: Optional[bool] = None) -> Dict[str, int]:
+        """Refresh all dirty derived artifacts. Returns counters for this
+        flush: {"refreshes": distinct dirty nodes, "levels": dependent depth,
+        "kernel_calls": batched refresh invocations}."""
+        if level_parallel is None:
+            level_parallel = self.config.level_parallel
+        self.flush_calls += 1
+        K = self.config.branching_factor
+        dim = self.config.embed_dim
+
+        per_tree = {tid: self.trees[tid].dirty_by_level() for tid in self.dirty_trees}
+        max_level = 0
+        refreshes = 0
+        kernel_calls = 0
+        for levels in per_tree.values():
+            for lam in levels:
+                max_level = max(max_level, lam)
+
+        for lam in range(1, max_level + 1):
+            batch: List[Tuple[TreeArena, int]] = []
+            for tid, levels in per_tree.items():
+                tree = self.trees[tid]
+                for n in levels.get(lam, []):
+                    batch.append((tree, n))
+            if not batch:
+                continue
+            if level_parallel:
+                kernel_calls += self._refresh_batch(batch, K, dim)
+            else:
+                # ablation: one kernel call per node (paper Fig. 6c baseline)
+                for item in batch:
+                    kernel_calls += self._refresh_batch([item], K, dim)
+            refreshes += len(batch)
+
+        # leaves count as refreshed artifacts only for bookkeeping
+        for tid, levels in per_tree.items():
+            tree = self.trees[tid]
+            refreshes += len(levels.get(0, []))
+            tree.dirty.clear()
+
+        # root-index rows for dirty trees (derived artifact)
+        for tid in self.dirty_trees:
+            tree = self.trees[tid]
+            self._root_matrix[tree.tree_id] = tree.root_emb()
+        self.dirty_trees.clear()
+
+        self.summary_refreshes += refreshes
+        self.flush_levels += max_level
+        return {"refreshes": refreshes, "levels": max_level, "kernel_calls": kernel_calls}
+
+    def _refresh_batch(self, batch: List[Tuple[TreeArena, int]], K: int, dim: int) -> int:
+        P = len(batch)
+        # pad the parent dim to a power-of-two bucket: the jit-compile set for
+        # the refresh kernel stays O(log P_max) across the system's lifetime
+        cap = 1
+        while cap < P:
+            cap *= 2
+        child_emb = np.zeros((cap, K, dim), np.float32)
+        mask = np.zeros((cap, K), np.float32)
+        for i, (tree, n) in enumerate(batch):
+            kids = tree.children[n][:K]
+            for j, c in enumerate(kids):
+                child_emb[i, j] = tree.emb[c]
+                mask[i, j] = 1.0
+        out = np.asarray(ops.tree_refresh(
+            jnp.asarray(child_emb), jnp.asarray(mask), impl=self.kernel_impl
+        ))
+        for i, (tree, n) in enumerate(batch):
+            tree.emb[n] = out[i]
+            tree.refresh_text(n)
+        return 1
+
+    def eager_refresh_path(self, scope_key: str) -> int:
+        """Ablation baseline (paper Fig. 6a): refresh the dirty path of one
+        tree immediately, one node per call, bottom-up. Returns #calls."""
+        tree = self.trees[scope_key]
+        levels = tree.dirty_by_level()
+        calls = 0
+        for lam in sorted(l for l in levels if l >= 1):
+            for n in levels[lam]:
+                calls += self._refresh_batch([(tree, n)], self.config.branching_factor,
+                                             self.config.embed_dim)
+        tree.dirty.clear()
+        self._root_matrix[tree.tree_id] = tree.root_emb()
+        self.dirty_trees.discard(scope_key)
+        self.summary_refreshes += calls
+        return calls
+
+    # ------------------------------------------------------------------
+    # derived-index views (retrieval reads these)
+    # ------------------------------------------------------------------
+    def root_index(self) -> Tuple[np.ndarray, int, List[str]]:
+        """(capacity-padded matrix, valid count, tree order)."""
+        return self._root_matrix, len(self._tree_order), list(self._tree_order)
+
+    def fact_index(self) -> Tuple[np.ndarray, int]:
+        """(capacity-padded matrix, valid count). Dead facts' rows are zeroed
+        on deletion; callers filter by fact_alive."""
+        return self.fact_emb, len(self.facts)
+
+    # ------------------------------------------------------------------
+    # scene routing state
+    # ------------------------------------------------------------------
+    def route_scene(self, emb: np.ndarray) -> int:
+        """Nearest-centroid online clustering; returns scene id."""
+        thr = self.config.scene_sim_threshold
+        if self.scene_centroids.shape[0]:
+            sims = self.scene_centroids @ emb
+            best = int(np.argmax(sims))
+            if sims[best] >= thr:
+                c = self.scene_counts[best]
+                self.scene_centroids[best] = (self.scene_centroids[best] * c + emb) / (c + 1)
+                norm = np.linalg.norm(self.scene_centroids[best]) + 1e-6
+                self.scene_centroids[best] /= norm
+                self.scene_counts[best] += 1
+                return best
+        self.scene_centroids = np.concatenate([self.scene_centroids, emb[None]], axis=0)
+        self.scene_counts.append(1)
+        return self.scene_centroids.shape[0] - 1
+
+    # ------------------------------------------------------------------
+    # stats
+    # ------------------------------------------------------------------
+    def scale_stats(self) -> Dict[str, int]:
+        return {
+            "facts": sum(self.fact_alive),
+            "trees": sum(1 for t in self.trees.values() if t.root >= 0),
+            "nodes": sum(t.num_nodes for t in self.trees.values()),
+            "cells": len(self.cells),
+        }

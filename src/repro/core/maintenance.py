@@ -1,0 +1,223 @@
+"""Lifecycle maintenance: merge, delete, migration (paper §4.4, §5.6).
+
+All operations edit PERSISTENT state first (facts, scope assignments, tree
+structure, placement maps), then regenerate only derived artifacts whose
+dependency paths intersect the affected scopes — via the same lazy
+dirty-path flush as normal ingestion.
+
+Migration merge is the paper's Figure-5 experiment: already-materialized
+memory states combine WITHOUT replaying raw sessions through extraction.
+Matching scopes bulk-insert the other forest's leaves (dirty paths only);
+unmatched trees are copied verbatim — their derived artifacts remain valid
+and are NOT recomputed, which is where the >2x speedup comes from.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.forest import Forest
+from repro.core.memtree import TreeArena
+from repro.core.types import CanonicalFact
+
+
+def delete_session(forest: Forest, session_id: str) -> Dict[str, int]:
+    """Targeted deletion: the session registry identifies derived facts,
+    cells, and tree leaves; only invalidated ancestor paths refresh."""
+    reg = forest.session_registry.get(session_id)
+    if not reg:
+        return {"facts_removed": 0, "leaves_removed": 0}
+    leaves_removed = 0
+    facts_removed = 0
+    for fid in reg["facts"]:
+        fact = forest.facts[fid]
+        fact.sources = [s for s in fact.sources if s[0] != session_id]
+        if fact.sources:
+            continue  # still supported by other sessions
+        forest.fact_alive[fid] = False
+        forest.fact_emb[fid] = 0.0   # dead rows go inert in the index
+        facts_removed += 1
+        for scope_key, leaf in forest.placement.pop(("fact", fid), []):
+            tree = forest.trees[scope_key]
+            if tree.alive[leaf]:
+                tree.delete_leaf(leaf)
+                leaves_removed += 1
+                forest.dirty_trees.add(scope_key)
+    for cid in reg["cells"]:
+        for scope_key, leaf in forest.placement.pop(("cell", cid), []):
+            tree = forest.trees[scope_key]
+            if tree.alive[leaf]:
+                tree.delete_leaf(leaf)
+                leaves_removed += 1
+                forest.dirty_trees.add(scope_key)
+    forest.session_registry.pop(session_id, None)
+    forest.flush()
+    return {"facts_removed": facts_removed, "leaves_removed": leaves_removed}
+
+
+def _copy_tree_into(dst: Forest, src_tree: TreeArena, scope_key: str,
+                    fact_id_map: Dict[int, int], cell_id_map: Dict[int, int]) -> None:
+    """Verbatim structural copy (derived artifacts stay valid — no refresh)."""
+    t = dst.get_tree(scope_key, src_tree.kind)
+    assert t.root < 0, "copy target must be empty"
+    n = src_tree._n
+    t.parent = list(src_tree.parent)
+    t.children = [list(c) for c in src_tree.children]
+    t.level = list(src_tree.level)
+    t.start_ts = list(src_tree.start_ts)
+    t.end_ts = list(src_tree.end_ts)
+    t.text = list(src_tree.text)
+    t.alive = list(src_tree.alive)
+    t.payload = []
+    for p in src_tree.payload:
+        if p is None:
+            t.payload.append(None)
+        elif p >= 0:
+            t.payload.append(fact_id_map[p])
+        else:
+            t.payload.append(-cell_id_map[-p - 1] - 1)
+    t.emb = src_tree.emb[:max(n, 8)].copy()
+    t.root = src_tree.root
+    t._n = n
+    t.dirty = set()
+    # placement rows for the copied leaves
+    for nid in range(n):
+        if t.alive[nid] and t.level[nid] == 0 and t.payload[nid] is not None:
+            p = t.payload[nid]
+            if p >= 0:
+                dst.placement.setdefault(("fact", p), []).append((scope_key, nid))
+            else:
+                dst.placement.setdefault(("cell", -p - 1), []).append((scope_key, nid))
+    dst._root_matrix[t.tree_id] = t.root_emb()
+
+
+def migrate_merge(dst: Forest, src: Forest) -> Dict[str, int]:
+    """Merge an already-materialized forest into `dst` (paper Fig. 5).
+
+    1. Reconcile canonical facts (key-dedup; sources union).
+    2. Matching scopes: bulk time-ordered insert of src leaves -> dirty paths.
+    3. Unmatched trees: verbatim copy, NO derived-artifact regeneration.
+    4. One lazy flush over dirty paths.
+    """
+    stats = {"facts_added": 0, "facts_merged": 0, "trees_copied": 0, "trees_merged": 0}
+
+    def key(f: CanonicalFact):
+        return (f.subject.lower(), f.attribute, f.value.lower(), round(f.ts, 1))
+
+    existing = {key(f): f.fact_id for f in dst.facts if dst.fact_alive[f.fact_id]}
+    fact_id_map: Dict[int, int] = {}
+    for f in src.facts:
+        if not src.fact_alive[f.fact_id]:
+            continue
+        k = key(f)
+        if k in existing:
+            dst.facts[existing[k]].sources.extend(f.sources)
+            fact_id_map[f.fact_id] = existing[k]
+            stats["facts_merged"] += 1
+        else:
+            nf = copy.copy(f)
+            nf.sources = list(f.sources)
+            nid = dst.add_fact(nf)
+            fact_id_map[f.fact_id] = nid
+            stats["facts_added"] += 1
+
+    cell_id_map: Dict[int, int] = {}
+    for c in src.cells:
+        nc = copy.copy(c)
+        cell_id_map[c.cell_id] = dst.add_cell(nc)
+
+    # scene scopes: cluster ids are forest-local, so match src scenes to dst
+    # scenes by centroid similarity (>= threshold merges into the existing
+    # scene tree; below it becomes a new scene). This is the "matching
+    # scopes are merged" path of §4.4 for scene trees.
+    scene_remap: Dict[str, str] = {}
+    thr = dst.config.scene_sim_threshold
+    for skey, tree in src.trees.items():
+        if tree.kind != "scene":
+            continue
+        sid = int(skey.split(":")[1])
+        cent = src.scene_centroids[sid]
+        if dst.scene_centroids.shape[0]:
+            sims = dst.scene_centroids @ cent
+            best = int(np.argmax(sims))
+            if sims[best] >= thr:
+                scene_remap[skey] = f"scene:{best}"
+                c = dst.scene_counts[best]
+                sc = src.scene_counts[sid]
+                merged = (dst.scene_centroids[best] * c + cent * sc) / (c + sc)
+                dst.scene_centroids[best] = merged / (np.linalg.norm(merged) + 1e-6)
+                dst.scene_counts[best] += sc
+                continue
+        new_id = dst.scene_centroids.shape[0]
+        scene_remap[skey] = f"scene:{new_id}"
+        dst.scene_centroids = np.concatenate(
+            [dst.scene_centroids, cent[None]], axis=0)
+        dst.scene_counts.append(src.scene_counts[sid])
+
+    for skey, src_tree in src.trees.items():
+        if src_tree.root < 0:
+            continue
+        dkey = scene_remap.get(skey, skey)
+        if dkey in dst.trees and dst.trees[dkey].root >= 0:
+            # matched scope: bulk insert src leaves (time-ordered) — dirty paths
+            t = dst.trees[dkey]
+            for leaf in src_tree.leaves_in_order():
+                p = src_tree.payload[leaf]
+                if p is None:
+                    continue
+                if p >= 0:
+                    item_kind, item_id = "fact", fact_id_map[p]
+                    if not dst.fact_alive[item_id]:
+                        continue
+                else:
+                    item_kind, item_id = "cell", cell_id_map[-p - 1]
+                nl = t.insert_leaf(
+                    item_id if item_kind == "fact" else -item_id - 1,
+                    src_tree.start_ts[leaf], src_tree.emb[leaf], src_tree.text[leaf],
+                )
+                dst.placement.setdefault((item_kind, item_id), []).append((dkey, nl))
+            dst.dirty_trees.add(dkey)
+            stats["trees_merged"] += 1
+        else:
+            _copy_tree_into(dst, src_tree, dkey, fact_id_map, cell_id_map)
+            stats["trees_copied"] += 1
+
+    for sid, reg in src.session_registry.items():
+        d = dst.session_registry.setdefault(sid, {"facts": [], "cells": []})
+        d["facts"].extend(fact_id_map[f] for f in reg["facts"] if f in fact_id_map)
+        d["cells"].extend(cell_id_map[c] for c in reg["cells"] if c in cell_id_map)
+
+    dst.flush()
+    return stats
+
+
+def rematerialize(forest: Forest, *, new_branching: int) -> Forest:
+    """Policy/index migration (paper §4.4): rebuild trees from persistent
+    state (facts + scope assignments) under a new tree configuration —
+    NO re-extraction, NO session replay; fact embeddings are reused."""
+    from repro.config import MemForestConfig
+    import dataclasses
+
+    new_cfg = dataclasses.replace(forest.config, branching_factor=new_branching)
+    out = Forest(new_cfg, kernel_impl=forest.kernel_impl)
+    out.facts = forest.facts
+    out.fact_alive = list(forest.fact_alive)
+    out.fact_emb = forest.fact_emb
+    out.cells = forest.cells
+    out.session_registry = {k: {kk: list(vv) for kk, vv in v.items()}
+                            for k, v in forest.session_registry.items()}
+    out.scene_centroids = forest.scene_centroids.copy()
+    out.scene_counts = list(forest.scene_counts)
+    for skey, tree in forest.trees.items():
+        for leaf in tree.leaves_in_order():
+            p = tree.payload[leaf]
+            if p is None or not tree.alive[leaf]:
+                continue
+            item_kind = "fact" if p >= 0 else "cell"
+            item_id = p if p >= 0 else -p - 1
+            out.insert_item(skey, tree.kind, item_kind, item_id,
+                            tree.start_ts[leaf], tree.emb[leaf], tree.text[leaf])
+    out.flush()
+    return out

@@ -1,0 +1,486 @@
+"""Query path: forest recall + tree browse (paper §4.3).
+
+Forest recall (Eq. 7): union of root recall (tree-level relevance) and
+fact-to-tree recall (evidence-level relevance mapped back through placement),
+scored with the fused `topk_sim` kernel.
+
+Browse modes (paper Table 7 ablation):
+  * flat        — top-k facts from the flat index, no tree structure
+  * root-only   — recalled trees' root summaries as evidence, no descent
+  * emb         — embedding-similarity beam descent
+  * emb+planner — embedding descent with the planner's rewritten query vector
+                  (the paper finds this HURTS: vector similarity can't carry
+                  structured browse intent — reproduced here)
+  * llm         — guided descent: child scores combine embedding similarity
+                  with structured temporal intent (before/after/first/when +
+                  anchor matching), the deterministic stand-in for LLM branch
+                  selection (DESIGN.md §7)
+  * llm+planner — llm browse + per-tree subqueries from root summaries
+                  (anchor terms weighted, tree time-range aware)
+
+The answerer is SHARED across all memory systems benchmarked (baselines
+included): given retrieved canonical facts it applies query semantics
+(current/before/when/first). Accuracy therefore measures retrieval quality —
+the paper's framing.
+"""
+from __future__ import annotations
+
+import re
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import MemForestConfig
+from repro.core.forest import Forest
+from repro.core.memtree import TreeArena
+from repro.core.types import CanonicalFact, Query, QueryResult
+from repro.data import templates as T
+from repro.kernels import ops
+
+_BEFORE_RE = re.compile(r"before (?:moving to |becoming |project )?([A-Za-z ]+?)\?")
+_WHEN_RE = re.compile(r"^When did")
+_FIRST_RE = re.compile(r"first")
+_NOW_RE = re.compile(r"now\?$")
+
+
+_STOPWORDS = frozenset(
+    "what where when did does do is was the a an to of in on as now first "
+    "before after moving become becoming switch switched start started who "
+    "which place over since".split()
+)
+
+
+def _content_words(text: str):
+    return {w for w in re.findall(r"[a-z]+", text.lower()) if w not in _STOPWORDS}
+
+
+class TemporalIntent:
+    __slots__ = ("relation", "anchor", "attribute")
+
+    def __init__(self, relation: str, anchor: Optional[str], attribute: str = ""):
+        self.relation = relation      # before | when | first | current | none
+        self.anchor = anchor
+        self.attribute = attribute    # inferred topical family (may be "")
+
+    @staticmethod
+    def parse(text: str) -> "TemporalIntent":
+        attr = T.infer_attribute(text)
+        m = _BEFORE_RE.search(text)
+        if m:
+            return TemporalIntent("before", m.group(1).strip(), attr)
+        if _WHEN_RE.search(text):
+            m2 = re.search(r"(?:move to|become|switch to project|preferring) ([A-Za-z ]+?)\?", text)
+            return TemporalIntent("when", m2.group(1).strip() if m2 else None, attr)
+        if _FIRST_RE.search(text):
+            return TemporalIntent("first", None, attr)
+        if _NOW_RE.search(text):
+            return TemporalIntent("current", None, attr)
+        return TemporalIntent("none", None, attr)
+
+    def matches_attr(self, text: str) -> bool:
+        if not self.attribute:
+            return False
+        kws = T.ATTR_KEYWORDS[self.attribute]
+        return bool(set(re.findall(r"[a-z]+", text.lower())) & kws)
+
+
+class Retriever:
+    def __init__(self, forest: Forest, encoder, config: MemForestConfig):
+        self.forest = forest
+        self.encoder = encoder
+        self.config = config
+
+    # ------------------------------------------------------------------
+    def retrieve(self, text: str, mode: Optional[str] = None,
+                 final_topk: Optional[int] = None) -> Tuple[List[CanonicalFact], List[str], Dict]:
+        """Returns (facts, evidence_texts, stats)."""
+        cfg = self.config
+        mode = mode or cfg.browse_mode
+        topk = final_topk or cfg.final_topk
+        t0 = time.perf_counter()
+        calls0 = self.encoder.stats.calls
+
+        q_emb = self.encoder.encode([text])[0]
+        intent = TemporalIntent.parse(text)
+
+        if mode == "flat":
+            facts = self._flat_topk(q_emb, topk)
+            return facts, [f.text for f in facts], self._stats(t0, calls0)
+
+        trees = self._forest_recall(q_emb)
+        if mode == "root-only":
+            ev = [t.text[t.root][:200] if t.root >= 0 else "" for t in trees]
+            facts = self._facts_from_summaries(trees, topk)
+            return facts, ev, self._stats(t0, calls0)
+
+        leaves: List[Tuple[TreeArena, int, float]] = []
+        for tree in trees:
+            browse_q = q_emb
+            browse_intent = intent
+            if mode.endswith("+planner"):
+                browse_q, browse_intent = self._plan(tree, text, q_emb, intent, mode)
+            use_intent = mode.startswith("llm")
+            leaves.extend(
+                self._browse(tree, browse_q,
+                             browse_intent if use_intent else None,
+                             text if use_intent else None)
+            )
+
+        facts, ev = self._resolve(leaves, q_emb, intent, topk, use_intent=mode.startswith("llm"))
+        return facts, ev, self._stats(t0, calls0)
+
+    def _stats(self, t0, calls0) -> Dict:
+        return {
+            "retrieval_s": time.perf_counter() - t0,
+            "encoder_calls": self.encoder.stats.calls - calls0,
+        }
+
+    # ------------------------------------------------------------------
+    def retrieve_batch(self, texts: List[str], mode: Optional[str] = None,
+                       final_topk: Optional[int] = None):
+        """Batched retrieval for serving throughput: ONE encoder forward and
+        ONE fused topk_sim over the fact/root indexes for all queries (the
+        kernel's Q dimension), then per-query browse. Returns a list of
+        (facts, evidence, stats) like retrieve()."""
+        cfg = self.config
+        mode = mode or cfg.browse_mode
+        topk = final_topk or cfg.final_topk
+        t0 = time.perf_counter()
+        calls0 = self.encoder.stats.calls
+
+        q_embs = self.encoder.encode(texts)              # one batch
+        mat, n_facts = self.forest.fact_index()
+        roots, n_trees, order = self.forest.root_index()
+
+        flat_idx = None
+        if n_facts:
+            _, flat_idx = ops.topk_sim(
+                jnp.asarray(q_embs), jnp.asarray(mat),
+                min(max(topk, cfg.fact_recall_topk), n_facts),
+                num_valid=n_facts, impl=self.forest.kernel_impl,
+            )
+            flat_idx = np.asarray(flat_idx)
+        root_idx = None
+        if n_trees:
+            _, root_idx = ops.topk_sim(
+                jnp.asarray(q_embs), jnp.asarray(roots),
+                min(cfg.forest_recall_topk * 3, n_trees),
+                num_valid=n_trees, impl=self.forest.kernel_impl,
+            )
+            root_idx = np.asarray(root_idx)
+
+        out = []
+        for qi, text in enumerate(texts):
+            q_emb = q_embs[qi]
+            flat = []
+            if flat_idx is not None:
+                for i in flat_idx[qi]:
+                    if i >= 0 and self.forest.fact_alive[int(i)]:
+                        flat.append(self.forest.facts[int(i)])
+            if mode == "flat":
+                out.append((flat[:topk], [f.text for f in flat[:topk]],
+                            self._stats(t0, calls0)))
+                continue
+            intent = TemporalIntent.parse(text)
+            trees = self._recall_from_precomputed(
+                q_emb, flat, root_idx[qi] if root_idx is not None else None, order)
+            leaves: List[Tuple[TreeArena, int, float]] = []
+            for tree in trees:
+                browse_q, browse_intent = q_emb, intent
+                if mode.endswith("+planner"):
+                    browse_q, browse_intent = self._plan(tree, text, q_emb, intent, mode)
+                use_intent = mode.startswith("llm")
+                leaves.extend(self._browse(
+                    tree, browse_q, browse_intent if use_intent else None,
+                    text if use_intent else None))
+            facts, ev = self._resolve(leaves, q_emb, intent, topk,
+                                      use_intent=mode.startswith("llm"))
+            out.append((facts, ev, self._stats(t0, calls0)))
+        return out
+
+    def _recall_from_precomputed(self, q_emb, flat_facts, root_row, order):
+        cfg = self.config
+        allowed = set(cfg.tree_families)
+        scores: Dict[str, float] = {}
+        if root_row is not None:
+            for i in root_row:
+                if i >= 0:
+                    key = order[int(i)]
+                    roots_mat, _, _ = self.forest.root_index()
+                    scores[key] = float(roots_mat[self.forest.trees[key].tree_id] @ q_emb)
+        for f in flat_facts[: cfg.fact_recall_topk]:
+            sim = float(f.emb @ q_emb)
+            for scope_key, _leaf in self.forest.placement.get(("fact", f.fact_id), []):
+                scores[scope_key] = max(scores.get(scope_key, -1e9), 0.95 * sim)
+            if "session" in allowed:
+                for sid, _ in f.sources[:2]:
+                    key = f"session:{sid}"
+                    if key in self.forest.trees:
+                        scores[key] = max(scores.get(key, -1e9), 0.9 * sim)
+        scores = {k: v for k, v in scores.items()
+                  if self.forest.trees[k].kind in allowed}
+        ranked = sorted(scores.items(), key=lambda kv: -kv[1])[: cfg.forest_recall_topk]
+        return [self.forest.trees[k] for k, _ in ranked
+                if self.forest.trees[k].root >= 0]
+
+    # ------------------------------------------------------------------
+    def _flat_topk(self, q_emb: np.ndarray, k: int) -> List[CanonicalFact]:
+        mat, n = self.forest.fact_index()
+        if n == 0:
+            return []
+        vals, idx = ops.topk_sim(
+            jnp.asarray(q_emb[None]), jnp.asarray(mat), min(k, n),
+            num_valid=n, impl=self.forest.kernel_impl,
+        )
+        out = []
+        for i in np.asarray(idx[0]):
+            if i >= 0 and self.forest.fact_alive[int(i)]:
+                out.append(self.forest.facts[int(i)])
+        return out
+
+    def _forest_recall(self, q_emb: np.ndarray) -> List[TreeArena]:
+        cfg = self.config
+        roots, n_trees, order = self.forest.root_index()
+        allowed = set(cfg.tree_families)
+        scores: Dict[str, float] = {}
+        if n_trees:
+            k = min(cfg.forest_recall_topk * 3, n_trees)
+            vals, idx = ops.topk_sim(
+                jnp.asarray(q_emb[None]), jnp.asarray(roots), k,
+                num_valid=n_trees, impl=self.forest.kernel_impl,
+            )
+            for v, i in zip(np.asarray(vals[0]), np.asarray(idx[0])):
+                if i >= 0:
+                    scores[order[int(i)]] = max(scores.get(order[int(i)], -1e9), float(v))
+        # fact -> tree recall
+        for f in self._flat_topk(q_emb, cfg.fact_recall_topk):
+            sim = float(f.emb @ q_emb)
+            for scope_key, _leaf in self.forest.placement.get(("fact", f.fact_id), []):
+                s = 0.95 * sim
+                scores[scope_key] = max(scores.get(scope_key, -1e9), s)
+        # fact -> source-session recall (session trees host cells; the facts'
+        # source refs map them back — keeps the fallback channel recallable)
+        if "session" in allowed:
+            for f in self._flat_topk(q_emb, cfg.fact_recall_topk):
+                for sid, _ in f.sources[:2]:
+                    key = f"session:{sid}"
+                    if key in self.forest.trees:
+                        scores[key] = max(scores.get(key, -1e9),
+                                          0.9 * float(f.emb @ q_emb))
+        # family filter BEFORE ranking (tree-family ablation must not starve)
+        scores = {
+            k: v for k, v in scores.items()
+            if self.forest.trees[k].kind in allowed
+        }
+        ranked = sorted(scores.items(), key=lambda kv: -kv[1])[: cfg.forest_recall_topk]
+        out = []
+        for key, _ in ranked:
+            t = self.forest.trees.get(key)
+            if t is not None and t.root >= 0:
+                out.append(t)
+        return out
+
+    # ------------------------------------------------------------------
+    def _plan(self, tree: TreeArena, text: str, q_emb: np.ndarray,
+              intent: TemporalIntent, mode: str):
+        """Planner: one call per tree creating a targeted subquery. For llm
+        browse it sharpens the intent with the anchor term; for emb browse the
+        rewrite is reduced to a vector mix (which is why emb+planner loses
+        signal — paper §6.2)."""
+        root_summary = tree.text[tree.root] if tree.root >= 0 else ""
+        sub = f"{text} [tree] {root_summary[:120]}"
+        sub_emb = self.encoder.encode([sub])[0]     # planner cost: 1 call/tree
+        if mode.startswith("emb"):
+            mix = 0.5 * q_emb + 0.5 * sub_emb
+            mix /= (np.linalg.norm(mix) + 1e-6)
+            return mix, intent
+        return q_emb, intent                        # llm: keep query, sharpen intent
+
+    # ------------------------------------------------------------------
+    def _browse(self, tree: TreeArena, q_emb: np.ndarray,
+                intent: Optional[TemporalIntent],
+                q_text: Optional[str] = None) -> List[Tuple[TreeArena, int, float]]:
+        """Coarse-to-fine descent. Returns (tree, leaf, score) candidates."""
+        if tree.root < 0:
+            return []
+        q_words = _content_words(q_text) if q_text else set()
+        beam = [(tree.root, 1.0)]
+        budget = self.config.browse_beam
+        collected: Dict[int, float] = {}
+        while beam:
+            next_beam: List[Tuple[int, float]] = []
+            for node, _ in beam:
+                if tree.level[node] == 0:
+                    s = float(tree.emb[node] @ q_emb)
+                    if intent is not None:
+                        s += self._leaf_bonus(tree, node, intent, q_words)
+                    collected[node] = max(collected.get(node, -1e9), s)
+                    continue
+                kids = tree.children[node]
+                sims = np.asarray([float(tree.emb[c] @ q_emb) for c in kids])
+                if intent is not None:
+                    sims = sims + self._intent_bonus(tree, kids, intent, q_words)
+                top = np.argsort(-sims)[:budget]
+                next_beam.extend((kids[i], float(sims[i])) for i in top)
+            agg: Dict[int, float] = {}
+            for n, s in next_beam:
+                agg[n] = max(agg.get(n, -1e9), s)
+            beam = sorted(agg.items(), key=lambda kv: -kv[1])[: max(budget * 2, 6)]
+        leaves = sorted(collected.items(), key=lambda kv: -kv[1])[:16]
+        out = [(tree, n, s) for n, s in leaves]
+        if intent is not None:
+            out.extend(self._temporal_navigate(tree, intent, q_words))
+        return out
+
+    def _intent_bonus(self, tree: TreeArena, kids: Sequence[int],
+                      intent: TemporalIntent, q_words) -> np.ndarray:
+        """The 'LLM reads child summaries' advantage: anchor-term + content-
+        word matching and temporal-relation preferences that a bare vector
+        score cannot carry."""
+        bonus = np.zeros(len(kids), np.float32)
+        for i, c in enumerate(kids):
+            txt = tree.text[c].lower()
+            if intent.anchor and intent.anchor.lower() in txt:
+                bonus[i] += 0.30
+            if q_words:
+                overlap = len(q_words & _content_words(txt))
+                bonus[i] += min(0.05 * overlap, 0.20)
+            if intent.relation == "first" and i == 0:
+                bonus[i] += 0.15      # earliest interval
+            if intent.relation == "current" and i == len(kids) - 1:
+                bonus[i] += 0.15      # latest interval
+        return bonus
+
+    def _leaf_bonus(self, tree: TreeArena, leaf: int,
+                    intent: TemporalIntent, q_words) -> float:
+        txt = tree.text[leaf].lower()
+        b = 0.0
+        if intent.anchor and intent.anchor.lower() in txt:
+            b += 0.30
+        if q_words:
+            b += min(0.05 * len(q_words & _content_words(txt)), 0.20)
+        return b
+
+    def _temporal_navigate(self, tree: TreeArena, intent: TemporalIntent,
+                           q_words) -> List[Tuple[TreeArena, int, float]]:
+        """Explicit temporal navigation over the leaf order — what MemTree
+        makes possible and flat stores cannot do (paper §4.3):
+          * before/when: the anchor transition leaf + its predecessor,
+          * current: the LAST topically-matching leaf,
+          * first: the FIRST topically-matching leaf."""
+        leaves = tree.leaves_in_order()
+        out: List[Tuple[TreeArena, int, float]] = []
+        if intent.relation in ("before", "when") and intent.anchor:
+            for j, leaf in enumerate(leaves):
+                if intent.anchor.lower() in tree.text[leaf].lower():
+                    out.append((tree, leaf, 1.0))
+                    if j > 0:
+                        out.append((tree, leaves[j - 1], 0.99))
+                    break
+        elif intent.relation == "current":
+            for leaf in reversed(leaves):
+                if intent.matches_attr(tree.text[leaf]) or (
+                    q_words and len(q_words & _content_words(tree.text[leaf])) >= 2
+                ):
+                    out.append((tree, leaf, 1.0))
+                    break
+        elif intent.relation == "first":
+            for leaf in leaves:
+                if intent.matches_attr(tree.text[leaf]) or (
+                    q_words and len(q_words & _content_words(tree.text[leaf])) >= 2
+                ):
+                    out.append((tree, leaf, 1.0))
+                    break
+        return out
+
+    # ------------------------------------------------------------------
+    def _resolve(self, leaves, q_emb, intent, topk, *, use_intent: bool):
+        seen = set()
+        scored: List[Tuple[float, CanonicalFact, str]] = []
+        for tree, leaf, score in leaves:
+            pay = tree.payload[leaf]
+            if pay is None or not tree.alive[leaf]:
+                continue
+            if pay >= 0:  # fact
+                f = self.forest.facts[pay]
+                if not self.forest.fact_alive[f.fact_id] or ("f", pay) in seen:
+                    continue
+                seen.add(("f", pay))
+                # navigation hits (score ~1.0) must survive the rerank: they
+                # are the LLM browser's explicit selections
+                s = float(f.emb @ q_emb) + (score * (0.5 if use_intent else 0.1))
+                if use_intent and intent:
+                    if intent.anchor and intent.anchor.lower() in f.text.lower():
+                        s += 0.3
+                    if intent.matches_attr(f.text):
+                        s += 0.15
+                scored.append((s, f, f.text))
+            else:        # dialogue cell — re-extract facts (fallback channel)
+                cell = self.forest.cells[-pay - 1]
+                if ("c", cell.cell_id) in seen:
+                    continue
+                seen.add(("c", cell.cell_id))
+                for cand in T.parse_statement(cell.text, (cell.session_id, cell.chunk_idx)):
+                    ftmp = CanonicalFact(
+                        fact_id=-1, text=cand.text, subject=cand.subject,
+                        attribute=cand.attribute, value=cand.value, ts=cand.ts,
+                        prev_value=cand.prev_value, sources=[cand.source],
+                        emb=q_emb * 0,
+                    )
+                    scored.append((score * 0.5, ftmp, cell.text[:160]))
+        scored.sort(key=lambda x: -x[0])
+        top = scored[:topk]
+        return [f for _, f, _ in top], [e for _, _, e in top]
+
+    def _facts_from_summaries(self, trees: List[TreeArena], topk: int) -> List[CanonicalFact]:
+        """root-only mode: parse what survives in root summaries (compressed,
+        lossy — the paper's point)."""
+        out = []
+        for t in trees:
+            if t.root < 0:
+                continue
+            for cand in T.parse_statement(t.text[t.root], ("root", 0)):
+                out.append(CanonicalFact(
+                    fact_id=-1, text=cand.text, subject=cand.subject,
+                    attribute=cand.attribute, value=cand.value, ts=cand.ts,
+                    prev_value=cand.prev_value, sources=[cand.source], emb=None,
+                ))
+        return out[:topk]
+
+
+# ---------------------------------------------------------------------------
+# shared answerer (all systems)
+# ---------------------------------------------------------------------------
+def answer_query(query: Query, facts: List[CanonicalFact]) -> str:
+    """Apply query semantics over the retrieved fact set."""
+    rel = [
+        f for f in facts
+        if f.subject.lower() == query.subject.lower()
+        and f.attribute == query.attribute
+    ]
+    if not rel:
+        return ""
+    rel.sort(key=lambda f: f.ts)
+    if query.qtype == "current":
+        return rel[-1].value
+    if query.qtype == "historical":
+        anchor = (query.anchor_value or "").lower()
+        for f in rel:
+            if f.value.lower() == anchor and f.prev_value:
+                return f.prev_value
+        before = [f for f in rel if f.value.lower() != anchor]
+        anchor_ts = next((f.ts for f in rel if f.value.lower() == anchor), None)
+        if anchor_ts is not None:
+            before = [f for f in before if f.ts < anchor_ts]
+        return before[-1].value if before else ""
+    if query.qtype == "transition_time":
+        anchor = (query.anchor_value or "").lower()
+        for f in rel:
+            if f.value.lower() == anchor:
+                return T.ts_to_date(f.ts)
+        return ""
+    if query.qtype in ("multi_session", "single_session"):
+        return rel[0].value
+    return rel[-1].value

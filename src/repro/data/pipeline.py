@@ -1,0 +1,58 @@
+"""Deterministic, shardable, checkpointable LM data pipeline.
+
+Stateless addressing: `batch_at(step)` generates the batch for any step
+directly from (seed, step, dp_rank), so checkpoint/restore only needs the
+step counter — restart-consistency is exact (no replay, no cursors), which
+is what the fault-tolerance path requires. Text corpora (the synthetic
+session workload) are packed into fixed-length token sequences.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.data.tokenizer import HashTokenizer
+
+
+class TokenPipeline:
+    def __init__(self, *, vocab_size: int, seq_len: int, global_batch: int,
+                 dp_rank: int = 0, dp_size: int = 1, seed: int = 0,
+                 corpus: Optional[List[str]] = None):
+        assert global_batch % dp_size == 0
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.local_batch = global_batch // dp_size
+        self.dp_rank = dp_rank
+        self.dp_size = dp_size
+        self.seed = seed
+        self._tokens: Optional[np.ndarray] = None
+        if corpus:
+            tok = HashTokenizer(vocab_size)
+            ids: List[int] = []
+            for doc in corpus:
+                ids.extend(tok.encode(doc, add_bos=True))
+                ids.append(tok.eos_id)
+            self._tokens = np.asarray(ids, np.int32)
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for `step` on this dp shard."""
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 4096 + self.dp_rank
+        )
+        B, S = self.local_batch, self.seq_len
+        if self._tokens is not None and len(self._tokens) > S + 1:
+            starts = rng.integers(0, len(self._tokens) - S - 1, size=B)
+            tok = np.stack([self._tokens[s:s + S + 1] for s in starts])
+        else:
+            tok = rng.integers(3, self.vocab_size, size=(B, S + 1), dtype=np.int64)
+        return {
+            "tokens": tok[:, :-1].astype(np.int32),
+            "labels": tok[:, 1:].astype(np.int32),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,103 @@
+"""Jit'd dispatchers over kernel implementations.
+
+``impl`` selects:
+  * ``reference``        — pure-jnp oracle (ref.py). XLA-fused; the CPU
+                           dry-run / default model path.
+  * ``pallas``           — the Pallas TPU kernel (TARGET hardware).
+  * ``pallas_interpret`` — the same kernel body executed in interpret mode
+                           (CPU correctness validation; used by tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.topk_sim import topk_sim as _topk
+from repro.kernels.tree_refresh import tree_refresh as _tree_refresh
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
+from repro.kernels.mamba2_ssd import mamba2_ssd as _ssd
+
+VALID_IMPLS = ("reference", "pallas", "pallas_interpret")
+
+
+def _check(impl: str) -> None:
+    if impl not in VALID_IMPLS:
+        raise ValueError(f"impl must be one of {VALID_IMPLS}, got {impl!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "block_q", "block_kv"))
+def attention(q, k, v, *, causal=True, impl="reference", block_q=512, block_kv=512):
+    _check(impl)
+    if impl == "reference":
+        return _ref.attention_ref(q, k, v, causal=causal)
+    return _flash(
+        q, k, v,
+        causal=causal,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_kv"))
+def decode_attention(q, k_cache, v_cache, lengths, *, impl="reference", block_kv=1024):
+    _check(impl)
+    if impl == "reference":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    return _decode(
+        q, k_cache, v_cache, lengths,
+        block_kv=block_kv,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "normalize", "impl"))
+def topk_sim(queries, keys, k, *, normalize=True, num_valid=None, impl="reference"):
+    _check(impl)
+    if impl == "reference":
+        return _ref.topk_sim_ref(queries, keys, k, normalize=normalize,
+                                 num_valid=num_valid)
+    return _topk(
+        queries, keys, k,
+        normalize=normalize,
+        num_valid=num_valid,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def tree_refresh(child_emb, child_mask, *, impl="reference"):
+    _check(impl)
+    if impl == "reference":
+        return _ref.tree_refresh_ref(child_emb, child_mask)
+    return _tree_refresh(
+        child_emb, child_mask, interpret=(impl == "pallas_interpret")
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def rwkv6_scan(r, k, v, w, u, state, *, impl="reference", chunk=64):
+    _check(impl)
+    if impl == "reference":
+        return _ref.rwkv6_scan_ref(r, k, v, w, u, state)
+    return _rwkv6(
+        r, k, v, w, u, state,
+        chunk=chunk,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def mamba2_ssd(x, dt, A, Bm, C, state, *, impl="reference", chunk=64):
+    _check(impl)
+    if impl == "reference":
+        return _ref.mamba2_ssd_ref(x, dt, A, Bm, C, state)
+    return _ssd(
+        x, dt, A, Bm, C, state,
+        chunk=chunk,
+        interpret=(impl == "pallas_interpret"),
+    )

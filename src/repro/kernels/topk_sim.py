@@ -1,0 +1,147 @@
+"""Fused cosine-similarity + top-k — Pallas TPU kernel.
+
+This is MemForest's retrieval hot path: forest recall scores a query against
+all tree-root embeddings; fact-to-tree recall scores it against the canonical
+fact index. Fusing normalize + matmul + running top-k selection avoids ever
+materializing the full (Q, N) score matrix in HBM — the kernel streams key
+tiles through VMEM and keeps a (block_q, K) running top-k in scratch.
+
+Grid: (num_q_blocks, num_key_blocks), key blocks innermost/sequential.
+Selection: per key tile, the candidate pool is [running top-k | tile scores]
+(block_q, K + block_kv); K iterations of max+mask extract the new top-k.
+K <= 32 keeps this cheap relative to the (block_q x D x block_kv) MXU matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 512
+NEG_INF = -1e30
+
+
+def _topk_kernel(
+    nv_ref,                # (1, 1) int32 — number of valid keys (runtime)
+    q_ref,                 # (bq, D) — pre-normalized
+    k_ref,                 # (bk, D) — pre-normalized
+    vals_ref, idx_ref,     # (bq, K) f32 / int32 outputs
+    tv_ref, ti_ref,        # scratch: (bq, K) f32 / int32 running top-k
+    *,
+    k: int,
+    block_kv: int,
+    num_kv_blocks: int,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        tv_ref[...] = jnp.full_like(tv_ref, NEG_INF)
+        ti_ref[...] = jnp.full_like(ti_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)
+    kk = k_ref[...].astype(jnp.float32)
+    scores = jax.lax.dot_general(
+        q, kk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bk)
+    base = ik * block_kv
+    cols = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(cols < nv_ref[0, 0], scores, NEG_INF)  # mask padded keys
+
+    # candidate pool = running top-k ++ this tile
+    pool_v = jnp.concatenate([tv_ref[...], scores], axis=1)         # (bq, K+bk)
+    pool_i = jnp.concatenate([ti_ref[...], cols], axis=1)
+
+    new_v = []
+    new_i = []
+    for _ in range(k):
+        m = jnp.max(pool_v, axis=1, keepdims=True)                   # (bq, 1)
+        am = jnp.argmax(pool_v, axis=1)                              # (bq,)
+        sel = jnp.take_along_axis(pool_i, am[:, None], axis=1)       # (bq, 1)
+        new_v.append(m)
+        new_i.append(sel)
+        onehot = jax.lax.broadcasted_iota(jnp.int32, pool_v.shape, 1) == am[:, None]
+        pool_v = jnp.where(onehot, NEG_INF, pool_v)
+    tv_ref[...] = jnp.concatenate(new_v, axis=1)
+    ti_ref[...] = jnp.concatenate(new_i, axis=1)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finish():
+        vals_ref[...] = tv_ref[...]
+        idx_ref[...] = jnp.where(tv_ref[...] > NEG_INF / 2, ti_ref[...], -1)
+
+
+def _pad_to(x: jax.Array, n: int, axis: int = 0) -> jax.Array:
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def topk_sim(
+    queries: jax.Array,  # (Q, D)
+    keys: jax.Array,     # (N, D)
+    k: int,
+    *,
+    normalize: bool = True,
+    num_valid=None,      # optional traced scalar (defaults to N)
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+):
+    Q, D = queries.shape
+    N = keys.shape[0]
+    qf = queries.astype(jnp.float32)
+    kf = keys.astype(jnp.float32)
+    if normalize:
+        qf = qf / (jnp.linalg.norm(qf, axis=-1, keepdims=True) + 1e-6)
+        kf = kf / (jnp.linalg.norm(kf, axis=-1, keepdims=True) + 1e-6)
+
+    block_q = min(block_q, max(Q, 8))
+    block_kv = min(block_kv, max(N, 8))
+    Qp = -(-Q // block_q) * block_q
+    Np = -(-N // block_kv) * block_kv
+    qp = _pad_to(qf, Qp)
+    kp = _pad_to(kf, Np)
+    nq = Qp // block_q
+    nkv = Np // block_kv
+    nv = jnp.asarray(N if num_valid is None else num_valid, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(
+        _topk_kernel,
+        k=k,
+        block_kv=block_kv,
+        num_kv_blocks=nkv,
+    )
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda iq, ik: (0, 0)),
+            pl.BlockSpec((block_q, D), lambda iq, ik: (iq, 0)),
+            pl.BlockSpec((block_kv, D), lambda iq, ik: (ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda iq, ik: (iq, 0)),
+            pl.BlockSpec((block_q, k), lambda iq, ik: (iq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(nv, qp, kp)
+    return vals[:Q], idx[:Q]

@@ -1,0 +1,155 @@
+"""Collective-traffic analysis of compiled (SPMD-partitioned) HLO.
+
+``compiled.cost_analysis()`` does not report collective bytes, and — as the
+scan probe in EXPERIMENTS.md §Dry-run documents — XLA counts while-loop
+bodies exactly ONCE. This parser therefore:
+
+  1. splits the compiled HLO text into computations,
+  2. sums per-computation collective payload bytes (result-shape convention;
+     reduce-scatter is scaled by its group size so the bytes reflect the
+     pre-scatter operand),
+  3. recovers every while loop's trip count from its condition computation
+     (the s32 bound constant), and
+  4. expands collective bytes recursively: eff(comp) = own + Σ trip × eff(body),
+
+so a per-layer all-reduce inside a scan over 94 layers is counted 94 times —
+what actually crosses the links per step.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[dims] shape literal in `text`."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Returns {op_kind: effective bytes per device per step} plus "total"
+    and "num_collectives"."""
+    comps = parse_computations(hlo_text)
+
+    own: Dict[str, Dict[str, float]] = {c: defaultdict(float) for c in comps}
+    whiles: Dict[str, List[Tuple[str, str]]] = {c: [] for c in comps}
+    counts: Dict[str, int] = defaultdict(int)
+
+    for cname, lines in comps.items():
+        for line in lines:
+            s = line.strip()
+            if not s.startswith("%") and not s.startswith("ROOT"):
+                continue
+            for op in _COLLECTIVES:
+                # match `= <shape> op-name(` (with optional -start/-done forms)
+                if re.search(rf"\s{op}(-start)?\(", s):
+                    lhs = s.split(f"{op}(")[0].split(f"{op}-start(")[0]
+                    nbytes = _shape_bytes(lhs.split("=", 1)[-1])
+                    if op == "reduce-scatter":
+                        g = _GROUPS_RE.search(s)
+                        if g:
+                            nbytes *= int(g.group(2))
+                    own[cname][op] += nbytes
+                    counts[op] += 1
+                    break
+            wm = _WHILE_RE.search(s)
+            if wm:
+                whiles[cname].append((wm.group(1), wm.group(2)))
+
+    def trip_count(cond_comp: str) -> int:
+        best = 1
+        for line in comps.get(cond_comp, []):
+            for m in _CONST_RE.finditer(line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def eff(cname: str, stack=()) -> Dict[str, float]:
+        if cname in memo:
+            return memo[cname]
+        if cname in stack:
+            return defaultdict(float)
+        out: Dict[str, float] = defaultdict(float)
+        for k, v in own.get(cname, {}).items():
+            out[k] += v
+        for cond, body in whiles.get(cname, []):
+            trips = trip_count(cond)
+            sub = eff(body, stack + (cname,))
+            for k, v in sub.items():
+                out[k] += trips * v
+        memo[cname] = out
+        return out
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry = m.group(2)
+                break
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+
+    result = dict(eff(entry))
+    result["total"] = float(sum(v for k, v in result.items()))
+    result["num_collectives"] = float(sum(counts.values()))
+    return result
+
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    """Debug helper: all loop bounds found."""
+    comps = parse_computations(hlo_text)
+    out = []
+    for lines in comps.values():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond = m.group(1)
+                best = 1
+                for l2 in comps.get(cond, []):
+                    for c in _CONST_RE.finditer(l2):
+                        best = max(best, int(c.group(1)))
+                out.append(best)
+    return out

@@ -1,0 +1,102 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report artifacts/dryrun [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = [
+    "whisper_base", "rwkv6_1b6", "zamba2_7b", "qwen3_moe_235b", "olmoe_1b_7b",
+    "starcoder2_7b", "phi3_mini", "llama3_8b", "granite_3_8b", "pixtral_12b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str) -> List[Dict]:
+    rows = []
+    for f in sorted(os.listdir(out_dir)):
+        if f.endswith(".json"):
+            rows.append(json.load(open(os.path.join(out_dir, f))))
+    return rows
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.2f}"
+
+
+BF16_WIRE_CORRECTION = 0.5  # XLA:CPU legalizes bf16->f32; TPU wire bytes for
+                            # bf16 traffic are half the measured (see
+                            # EXPERIMENTS.md §Dry-run "measurement notes")
+
+
+def corrected_terms(r: Dict) -> Dict:
+    """Recompute the three terms with the TPU bf16 wire correction."""
+    t = dict(r["roofline"])
+    ndev = 1
+    for d in r["mesh_shape"]:
+        ndev *= d
+    coll = t["collective_s"] * BF16_WIRE_CORRECTION
+    step = max(t["compute_s"], t["memory_s"], coll)
+    t["collective_s_tpu"] = coll
+    t["dominant_tpu"] = max(
+        ("compute", t["compute_s"]), ("memory", t["memory_s"]),
+        ("collective", coll), key=lambda kv: kv[1])[0]
+    t["mfu_tpu"] = (t["model_flops"] / ndev / max(step, 1e-12)) / 197e12
+    return t
+
+
+def table(rows: List[Dict], mesh: str, md: bool = True) -> str:
+    out = []
+    hdr = ("| arch | shape | compile_s | peak GB/dev | compute ms | memory ms | "
+           "collective ms (tpu-est) | dominant | 6ND/HLO | roofline-MFU |")
+    sep = "|" + "---|" * 10
+    out.append(hdr)
+    out.append(sep)
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = next((x for x in rows if x["arch"] == arch and
+                      x["shape"] == shape and x["mesh"] == mesh), None)
+            if r is None:
+                continue
+            if r.get("skipped"):
+                out.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                           f"SKIP (full-attn) | — | — |")
+                continue
+            if not r.get("ok"):
+                out.append(f"| {arch} | {shape} | FAIL | | | | | | | |")
+                continue
+            t = corrected_terms(r)
+            out.append(
+                f"| {arch} | {shape} | {r['compile_s']:.0f} | "
+                f"{r['memory']['peak_gb']:.1f} | {fmt_ms(t['compute_s'])} | "
+                f"{fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s_tpu'])} | "
+                f"{t['dominant_tpu']} | {t['useful_ratio']:.2f} | "
+                f"{t['mfu_tpu']*100:.1f}% |"
+            )
+    return "\n".join(out)
+
+
+def summary(rows: List[Dict]) -> str:
+    ok = sum(1 for r in rows if r.get("ok") and not r.get("skipped"))
+    skip = sum(1 for r in rows if r.get("skipped"))
+    fail = sum(1 for r in rows if not r.get("ok"))
+    return f"cells: {ok} compiled, {skip} skipped (documented), {fail} failed"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out_dir")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = load(args.out_dir)
+    print(summary(rows))
+    print()
+    print(table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

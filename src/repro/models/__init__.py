@@ -1,0 +1,1 @@
+from repro.models.factory import get_model, input_specs, param_specs  # noqa: F401

@@ -1,0 +1,108 @@
+"""Model factory: one uniform interface over all assigned architectures.
+
+    model = get_model(cfg)
+    model.init(key) -> params
+    model.loss(params, batch) -> (loss, metrics)
+    model.prefill(params, batch, max_len) -> (logits, cache)
+    model.decode(params, batch, cache) -> (logits, cache)
+    model.cache_specs(batch, max_len) -> pytree of ShapeDtypeStruct
+
+`input_specs(cfg, shape)` builds the ShapeDtypeStruct stand-ins for every
+model input of a benchmark cell (dry-run pattern: weak-type-correct,
+shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import rwkv6, transformer, whisper, zamba2
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    cache_specs: Callable[..., Any]
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif cfg.family == "ssm":
+        mod = rwkv6
+    elif cfg.family == "hybrid":
+        mod = zamba2
+    elif cfg.family == "encdec":
+        mod = whisper
+    else:
+        raise ValueError(cfg.family)
+    return Model(
+        cfg=cfg,
+        init=functools.partial(mod.init_params, cfg),
+        loss=lambda params, batch: mod.loss_fn(params, cfg, batch),
+        prefill=lambda params, batch, max_len: mod.prefill(params, cfg, batch, max_len),
+        decode=lambda params, batch, cache: mod.decode_step(params, cfg, batch, cache),
+        cache_specs=functools.partial(mod.cache_specs, cfg),
+    )
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """Parameter pytree as ShapeDtypeStructs — no allocation (dry-run)."""
+    model = get_model(cfg)
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the batch of one benchmark cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "decode":
+        batch: Dict[str, Any] = {"tokens": sds((B,), i32)}
+        return batch
+
+    if cfg.family == "encdec":
+        # decoder consumes S tokens; frames come from the stubbed frontend
+        return {
+            "frames": sds((B, cfg.encoder_seq_len, cfg.d_model), dt),
+            "tokens": sds((B, S), i32),
+            **({"labels": sds((B, S), i32)} if shape.is_train else {}),
+        }
+    if cfg.family == "vlm":
+        P = cfg.num_patches
+        return {
+            "tokens": sds((B, S - P), i32),
+            "patch_embeds": sds((B, P, cfg.d_model), dt),
+            **({"labels": sds((B, S - P), i32)} if shape.is_train else {}),
+        }
+    return {
+        "tokens": sds((B, S), i32),
+        **({"labels": sds((B, S), i32)} if shape.is_train else {}),
+    }
+
+
+def make_batch(cfg: ModelConfig, shape_kind: str, batch: int, seq: int, key) -> Dict[str, jax.Array]:
+    """Concrete random batch for smoke tests / examples (small shapes only)."""
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(ks[0], (batch, cfg.encoder_seq_len, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.random.normal(ks[0], (batch, cfg.num_patches, cfg.d_model), dt)
+    if shape_kind == "decode":
+        out["tokens"] = jax.random.randint(ks[1], (batch,), 0, cfg.vocab_size)
+        return out
+    out["tokens"] = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size)
+    if shape_kind == "train":
+        out["labels"] = jax.random.randint(ks[2], (batch, seq), 0, cfg.vocab_size)
+    return out

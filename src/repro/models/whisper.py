@@ -1,0 +1,197 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is STUBBED per the assignment: batches carry
+precomputed frame embeddings (B, S_enc, D) under "frames" (what the two conv
+layers + GELU would produce). Encoder: bidirectional self-attention + GELU
+MLP. Decoder: causal self-attention + cross-attention to encoder output.
+
+Serving: prefill encodes frames once, precomputes per-layer cross K/V, and
+fills the decoder self-attn KV cache; decode_step extends one token.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.launch.sharding import DATA_AXES, MODEL_AXIS, constrain
+from repro.models import layers as L
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    k_emb, k_enc, k_dec, k_out = jax.random.split(key, 4)
+
+    def init_enc_layer(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((D,), dtype),
+            "ln1b": jnp.zeros((D,), dtype),
+            "ln2": jnp.ones((D,), dtype),
+            "ln2b": jnp.zeros((D,), dtype),
+            "attn": L.attn_init(ka, cfg, dtype),
+            "mlp": L.mlp_init(km, cfg, dtype),
+        }
+
+    def init_dec_layer(k):
+        ka, kc, km = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.ones((D,), dtype),
+            "ln1b": jnp.zeros((D,), dtype),
+            "ln_x": jnp.ones((D,), dtype),
+            "ln_xb": jnp.zeros((D,), dtype),
+            "ln2": jnp.ones((D,), dtype),
+            "ln2b": jnp.zeros((D,), dtype),
+            "self_attn": L.attn_init(ka, cfg, dtype),
+            "cross_attn": L.attn_init(kc, cfg, dtype),
+            "mlp": L.mlp_init(km, cfg, dtype),
+        }
+
+    return {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, D, dtype),
+        "enc_layers": jax.vmap(init_enc_layer)(jax.random.split(k_enc, cfg.encoder_layers)),
+        "dec_layers": jax.vmap(init_dec_layer)(jax.random.split(k_dec, cfg.num_layers)),
+        "enc_norm": jnp.ones((D,), dtype),
+        "enc_norm_b": jnp.zeros((D,), dtype),
+        "dec_norm": jnp.ones((D,), dtype),
+        "dec_norm_b": jnp.zeros((D,), dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, D) stubbed conv-frontend output."""
+    B, S, D = frames.shape
+    x = frames + L.sinusoidal_positions(S, D).astype(frames.dtype)[None]
+    x = constrain(x, DATA_AXES, None, None)
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, p):
+        x = carry
+
+        def fwd(p, x):
+            h = L.layer_norm(x, p["ln1"], p["ln1b"], cfg.norm_eps)
+            x = x + L.attention_prefill(p["attn"], h, cfg, positions, causal=False)
+            h = L.layer_norm(x, p["ln2"], p["ln2b"], cfg.norm_eps)
+            return x + L.mlp_block(p["mlp"], h, cfg), None
+
+        if cfg.remat:
+            fwd = jax.checkpoint(fwd)
+        x, _ = fwd(p, x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.layer_norm(x, params["enc_norm"], params["enc_norm_b"], cfg.norm_eps)
+
+
+def _decoder_seq(params, cfg: ModelConfig, tokens, enc_out, *, collect_kv: bool):
+    B, S = tokens.shape
+    D = cfg.d_model
+    x = params["embed"][tokens] + L.sinusoidal_positions(S, D).astype(
+        jnp.dtype(cfg.dtype)
+    )[None]
+    x = constrain(x, DATA_AXES, None, None)
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, p):
+        x = carry
+
+        def fwd(p, x):
+            h = L.layer_norm(x, p["ln1"], p["ln1b"], cfg.norm_eps)
+            att, kv = L.attention_prefill(
+                p["self_attn"], h, cfg, positions, return_kv=True
+            )
+            x = x + att
+            h = L.layer_norm(x, p["ln_x"], p["ln_xb"], cfg.norm_eps)
+            ck, cv = L.cross_kv(p["cross_attn"], enc_out, cfg)
+            x = x + L.cross_attention(p["cross_attn"], h, cfg, ck, cv)
+            h = L.layer_norm(x, p["ln2"], p["ln2b"], cfg.norm_eps)
+            x = x + L.mlp_block(p["mlp"], h, cfg)
+            return x, (kv, (ck, cv))
+
+        if cfg.remat and not collect_kv:
+            fwd = jax.checkpoint(fwd)
+        x, kvs = fwd(p, x)
+        return x, kvs
+
+    x, (self_kv, cross_kv_all) = jax.lax.scan(body, x, params["dec_layers"])
+    h = L.layer_norm(x, params["dec_norm"], params["dec_norm_b"], cfg.norm_eps)
+    return h, self_kv, cross_kv_all
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    enc_out = encode(params, cfg, batch["frames"])
+    h, _, _ = _decoder_seq(params, cfg, batch["tokens"], enc_out, collect_kv=False)
+    logits = h @ params["embed"].T  # whisper ties output to embedding
+    loss = L.softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"xent": loss}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    Lc = cfg.num_layers
+    return {
+        "self_k": jax.ShapeDtypeStruct((Lc, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
+        "self_v": jax.ShapeDtypeStruct((Lc, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
+        "cross_k": jax.ShapeDtypeStruct((Lc, batch, cfg.encoder_seq_len, cfg.num_kv_heads, cfg.head_dim), dt),
+        "cross_v": jax.ShapeDtypeStruct((Lc, batch, cfg.encoder_seq_len, cfg.num_kv_heads, cfg.head_dim), dt),
+        "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array], max_len: int):
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h, self_kv, cross_kv_all = _decoder_seq(params, cfg, tokens, enc_out, collect_kv=True)
+    logits = h[:, -1] @ params["embed"].T
+    ks, vs = self_kv
+    cks, cvs = cross_kv_all
+    pad = max_len - S
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    dt = jnp.dtype(cfg.dtype)
+    cache = {
+        "self_k": ks.astype(dt),
+        "self_v": vs.astype(dt),
+        "cross_k": cks.astype(dt),
+        "cross_v": cvs.astype(dt),
+        "lengths": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array], cache):
+    tok = batch["tokens"]
+    B = tok.shape[0]
+    D = cfg.d_model
+    lengths = cache["lengths"]
+    pos_tab = L.sinusoidal_positions(cfg.max_seq_len, D).astype(jnp.dtype(cfg.dtype))
+    x = params["embed"][tok] + pos_tab[lengths]
+    x = constrain(x, DATA_AXES, None)
+
+    def body(carry, scanned):
+        x = carry
+        p, kc, vc, ck, cv = scanned
+        h = L.layer_norm(x, p["ln1"], p["ln1b"], cfg.norm_eps)
+        att, kc2, vc2 = L.attention_decode(p["self_attn"], h, cfg, kc, vc, lengths)
+        x = x + att
+        h = L.layer_norm(x, p["ln_x"], p["ln_xb"], cfg.norm_eps)
+        x = x + L.cross_attention(p["cross_attn"], h, cfg, ck, cv)
+        h = L.layer_norm(x, p["ln2"], p["ln2b"], cfg.norm_eps)
+        x = x + L.mlp_block(p["mlp"], h, cfg)
+        return x, (kc2, vc2)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    h = L.layer_norm(x, params["dec_norm"], params["dec_norm_b"], cfg.norm_eps)
+    logits = h @ params["embed"].T
+    new_cache = dict(cache, self_k=ks, self_v=vs, lengths=lengths + 1)
+    return logits, new_cache

@@ -1,0 +1,250 @@
+"""Zamba2 hybrid: Mamba2 backbone + one SHARED attention+MLP block applied
+every `attn_every` layers.
+
+Layer layout for L layers, period A: groups of A mamba layers, each followed
+by one application of the shared attention block (same weights every time,
+separate KV cache per application). Group params are reshaped to
+(G, A, ...) and double-scanned so the HLO stays O(1) in depth. The trailing
+L - G*A layers run as a remainder scan.
+
+Decode: per-layer (ssd_state, conv_state) + per-application KV caches.
+Because the backbone state is O(1) in context and attention is only at G
+applications, this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.launch.sharding import DATA_AXES, MODEL_AXIS, constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def _group_counts(cfg: ModelConfig):
+    A = cfg.attn_every
+    G = cfg.num_layers // A
+    rem = cfg.num_layers - G * A
+    return G, A, rem
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    k_emb, k_m, k_attn, k_mlp, k_out = jax.random.split(key, 5)
+
+    def init_mamba_layer(k):
+        return {
+            "ln": jnp.ones((D,), dtype),
+            "mamba": M.mamba2_init(k, cfg, dtype),
+        }
+
+    layer_keys = jax.random.split(k_m, cfg.num_layers)
+    stacked = jax.vmap(init_mamba_layer)(layer_keys)
+
+    return {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, D, dtype),
+        "layers": stacked,
+        "shared_attn": {
+            "ln1": jnp.ones((D,), dtype),
+            "ln2": jnp.ones((D,), dtype),
+            "attn": L.attn_init(k_attn, cfg, dtype),
+            "mlp": L.mlp_init(k_mlp, cfg, dtype),
+        },
+        "final_norm": jnp.ones((D,), dtype),
+        "unembed": L.dense_init(k_out, D, cfg.vocab_size, dtype),
+    }
+
+
+def _mamba_layer_seq(cfg, p, x, sst, cst):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, s_new, c_new = M.mamba2_seq(p["mamba"], h, cfg, sst, cst)
+    return x + y, s_new, c_new
+
+
+def _shared_attn_seq(cfg, sp, x, positions, return_kv=False):
+    h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    if return_kv:
+        att, kv = L.attention_prefill(sp["attn"], h, cfg, positions, return_kv=True)
+    else:
+        att = L.attention_prefill(sp["attn"], h, cfg, positions)
+        kv = None
+    x = x + att
+    h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = x + L.mlp_block(sp["mlp"], h, cfg)
+    return (x, kv) if return_kv else x
+
+
+def _split_groups(tree, G, A):
+    """(L, ...) stacked params -> ((G, A, ...) grouped, (rem, ...) tail)."""
+    grouped = jax.tree.map(lambda a: a[: G * A].reshape((G, A) + a.shape[1:]), tree)
+    tail = jax.tree.map(lambda a: a[G * A:], tree)
+    return grouped, tail
+
+
+def _run_seq(params, cfg: ModelConfig, x, states, *, collect_kv: bool):
+    """x: (B, T, D). states: {"ssd": (L,...), "conv": (L,...), "kv"?: ...}."""
+    B, T, _ = x.shape
+    G, A, rem = _group_counts(cfg)
+    positions = jnp.arange(T)[None, :]
+    sp = params["shared_attn"]
+
+    grouped, tail = _split_groups(params["layers"], G, A)
+    ssd_g, ssd_t = _split_groups(states["ssd"], G, A)
+    conv_g, conv_t = _split_groups(states["conv"], G, A)
+
+    def inner_body(carry, scanned):
+        x = carry
+        p, sst, cst = scanned
+        fwd = functools.partial(_mamba_layer_seq, cfg)
+        if cfg.remat:
+            fwd = jax.checkpoint(fwd)
+        x, s_new, c_new = fwd(p, x, sst, cst)
+        return x, (s_new, c_new)
+
+    def outer_body(carry, scanned):
+        x = carry
+        gp, gs, gc = scanned
+        x, (s_new, c_new) = jax.lax.scan(inner_body, x, (gp, gs, gc))
+        if collect_kv:
+            x, kv = _shared_attn_seq(cfg, sp, x, positions, return_kv=True)
+            return x, (s_new, c_new, kv)
+        x = _shared_attn_seq(cfg, sp, x, positions)
+        return x, (s_new, c_new)
+
+    if collect_kv:
+        x, (ssd_new, conv_new, kvs) = jax.lax.scan(outer_body, x, (grouped, ssd_g, conv_g))
+    else:
+        x, (ssd_new, conv_new) = jax.lax.scan(outer_body, x, (grouped, ssd_g, conv_g))
+        kvs = None
+
+    # remainder mamba layers
+    if rem > 0:
+        x, (ssd_tail, conv_tail) = jax.lax.scan(inner_body, x, (tail, ssd_t, conv_t))
+    else:
+        ssd_tail, conv_tail = ssd_t, conv_t
+
+    def unsplit(g, t):
+        flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), g)
+        return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0), flat, t)
+
+    new_states = {
+        "ssd": unsplit(ssd_new, ssd_tail),
+        "conv": unsplit(conv_new, conv_tail),
+    }
+    return x, new_states, kvs
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    (ssd_shape, conv_shape) = M.state_shapes(cfg, batch)
+    Lnum = cfg.num_layers
+    return {
+        "ssd": jnp.zeros((Lnum,) + ssd_shape, jnp.float32),
+        "conv": jnp.zeros((Lnum,) + conv_shape, jnp.dtype(cfg.dtype)),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    G, A, rem = _group_counts(cfg)
+    st = jax.eval_shape(lambda: init_state(cfg, batch))
+    dt = jnp.dtype(cfg.dtype)
+    kv_shape = (G, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        **st,
+        "kv_k": jax.ShapeDtypeStruct(kv_shape, dt),
+        "kv_v": jax.ShapeDtypeStruct(kv_shape, dt),
+        "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    x = constrain(x, DATA_AXES, None, None)
+    x, _, _ = _run_seq(params, cfg, x, init_state(cfg, B), collect_kv=False)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["unembed"]
+    loss = L.softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"xent": loss}
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array], max_len: int):
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    x = constrain(x, DATA_AXES, None, None)
+    x, states, kvs = _run_seq(params, cfg, x, init_state(cfg, B), collect_kv=True)
+    h = L.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = h @ params["unembed"]
+    ks, vs = kvs
+    pad = max_len - T
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {
+        **states,
+        "kv_k": ks.astype(jnp.dtype(cfg.dtype)),
+        "kv_v": vs.astype(jnp.dtype(cfg.dtype)),
+        "lengths": jnp.full((B,), T, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array], cache):
+    tok = batch["tokens"]
+    x = params["embed"][tok]            # (B, D)
+    x = constrain(x, DATA_AXES, None)
+    G, A, rem = _group_counts(cfg)
+    lengths = cache["lengths"]
+    sp = params["shared_attn"]
+
+    grouped, tail = _split_groups(params["layers"], G, A)
+    ssd_g, ssd_t = _split_groups(cache["ssd"], G, A)
+    conv_g, conv_t = _split_groups(cache["conv"], G, A)
+
+    def inner_body(carry, scanned):
+        x = carry
+        p, sst, cst = scanned
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        y, s_new, c_new = M.mamba2_step(p["mamba"], h, cfg, sst, cst)
+        return x + y, (s_new, c_new)
+
+    def outer_body(carry, scanned):
+        x = carry
+        gp, gs, gc, kc, vc = scanned
+        x, (s_new, c_new) = jax.lax.scan(inner_body, x, (gp, gs, gc))
+        h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+        att, kc2, vc2 = L.attention_decode(sp["attn"], h, cfg, kc, vc, lengths)
+        x = x + att
+        h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_block(sp["mlp"], h, cfg)
+        return x, (s_new, c_new, kc2, vc2)
+
+    x, (ssd_new, conv_new, ks, vs) = jax.lax.scan(
+        outer_body, x, (grouped, ssd_g, conv_g, cache["kv_k"], cache["kv_v"])
+    )
+    if rem > 0:
+        x, (ssd_tail, conv_tail) = jax.lax.scan(inner_body, x, (tail, ssd_t, conv_t))
+    else:
+        ssd_tail, conv_tail = ssd_t, conv_t
+
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["unembed"]
+
+    def unsplit(g, t):
+        flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), g)
+        return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0), flat, t)
+
+    new_cache = {
+        "ssd": unsplit(ssd_new, ssd_tail),
+        "conv": unsplit(conv_new, conv_tail),
+        "kv_k": ks,
+        "kv_v": vs,
+        "lengths": lengths + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,165 @@
+"""Sharded checkpointing with atomic two-phase commit (no orbax dependency).
+
+Layout:
+    <dir>/step_<N>.tmp/...   (write phase)
+    <dir>/step_<N>/
+        manifest.json        (tree structure, shapes, dtypes, metadata)
+        shard_<i>.bin        (zstd-compressed msgpack of leaf buffers)
+
+Commit = fsync files -> atomic rename of the directory -> update LATEST file.
+A crash mid-write leaves only a .tmp directory, which restore() ignores —
+the previous checkpoint remains the recovery point (fault tolerance test
+covers this). Multi-host: each process writes shard files for its addressable
+shards; this container is single-process, so shard 0 carries everything, but
+the manifest format carries (process, leaf, offset) so a resharded restore
+can remap (see runtime/fault_tolerance.ElasticScaler).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+import jax
+
+_LEAVES_PER_SHARD = 64
+
+
+def _path_str(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save(ckpt_dir: str, step: int, state: Any, *, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(state)[0]
+    treedef = jax.tree_util.tree_structure(state)
+
+    manifest: Dict[str, Any] = {
+        "step": step,
+        "extra": extra or {},
+        "process_index": jax.process_index(),
+        "num_processes": jax.process_count(),
+        "leaves": [],
+    }
+    cctx = zstd.ZstdCompressor(level=3)
+    shard_idx = 0
+    buf: List[Tuple[str, bytes, str, List[int]]] = []
+
+    def flush_shard():
+        nonlocal shard_idx, buf
+        if not buf:
+            return
+        payload = msgpack.packb(
+            [(p, d, dt, sh) for p, d, dt, sh in buf], use_bin_type=True
+        )
+        fname = f"shard_{shard_idx:04d}.bin"
+        with open(os.path.join(tmp, fname), "wb") as f:
+            f.write(cctx.compress(payload))
+            f.flush()
+            os.fsync(f.fileno())
+        for p, _d, dt, sh in buf:
+            manifest["leaves"].append({"path": p, "shard": fname,
+                                       "dtype": dt, "shape": sh})
+        shard_idx += 1
+        buf = []
+
+    for keypath, leaf in leaves_with_paths:
+        arr = np.asarray(leaf)
+        buf.append((_path_str(keypath), arr.tobytes(), str(arr.dtype), list(arr.shape)))
+        if len(buf) >= _LEAVES_PER_SHARD:
+            flush_shard()
+    flush_shard()
+
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)           # atomic commit
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"), os.path.join(ckpt_dir, "LATEST"))
+
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    marker = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        name = f.read().strip()
+    path = os.path.join(ckpt_dir, name)
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        # torn checkpoint: fall back to newest complete one
+        for d in sorted(os.listdir(ckpt_dir), reverse=True):
+            if d.startswith("step_") and not d.endswith(".tmp") and \
+                    os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+                return int(d.split("_")[1])
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, state_like: Any, step: Optional[int] = None
+            ) -> Tuple[Any, Dict]:
+    """Restore into the structure of `state_like` (arrays or SDS)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    dctx = zstd.ZstdDecompressor()
+    by_path: Dict[str, np.ndarray] = {}
+    shards = {e["shard"] for e in manifest["leaves"]}
+    for fname in shards:
+        with open(os.path.join(path, fname), "rb") as f:
+            payload = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+        for p, data, dt, sh in payload:
+            by_path[p] = np.frombuffer(data, dtype=dt).reshape(sh)
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(state_like)[0]
+    treedef = jax.tree_util.tree_structure(state_like)
+    out = []
+    for keypath, leaf in leaves_with_paths:
+        p = _path_str(keypath)
+        arr = by_path[p]
+        want_dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
+        out.append(jax.numpy.asarray(arr).astype(want_dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

@@ -1,0 +1,59 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 512+ chips the DP all-reduce crosses the pod boundary (DCI — an order of
+magnitude less bandwidth than intra-pod ICI). Two compressors:
+
+  * topk   — per-tensor magnitude top-k sparsification with ERROR FEEDBACK
+             (residual accumulates, nothing is lost in expectation). A real
+             deployment all-gathers (indices, values): volume = 2 * ratio of
+             dense. Here the math (and convergence behavior) is exact; the
+             collective itself stays dense under SPMD — the byte saving is
+             accounted analytically in EXPERIMENTS.md §Roofline.
+  * int8   — per-tensor symmetric quantization (2x vs bf16, 4x vs fp32).
+
+Both run INSIDE the train step (jitted), before the gradient psum that the
+data-parallel sharding induces.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_one(g: jax.Array, ratio: float) -> jax.Array:
+    flat = g.reshape(-1)
+    k = max(int(flat.shape[0] * ratio), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    return (flat * mask).reshape(g.shape)
+
+
+def _int8_one(g: jax.Array) -> jax.Array:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress(grads: Any, err: Any, *, method: str, ratio: float = 0.125
+             ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+    """Returns (compressed_grads, new_error_state, metrics)."""
+    if method == "none":
+        return grads, err, {"compress_ratio": jnp.asarray(1.0)}
+    g32 = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, err)
+    if method == "topk":
+        comp = jax.tree.map(lambda g: _topk_one(g, ratio), g32)
+        new_err = jax.tree.map(lambda g, c: g - c, g32, comp)
+        # wire volume: indices (4B) + values (4B) per kept entry vs 2B dense
+        wire = jnp.asarray(ratio * (4 + 4) / 2.0)
+        return comp, new_err, {"compress_ratio": wire}
+    if method == "int8":
+        comp = jax.tree.map(_int8_one, g32)
+        new_err = jax.tree.map(lambda g, c: g - c, g32, comp)
+        return comp, new_err, {"compress_ratio": jnp.asarray(0.5)}
+    raise ValueError(method)

@@ -1,0 +1,95 @@
+"""Train-step builder: loss -> grads (optional microbatch accumulation) ->
+optional compression -> clip -> AdamW. One function, jitted once, lowered by
+the dry-run for every architecture.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models.factory import Model
+from repro.training import grad_compress, optimizer
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", "err"?}. Microbatching splits the batch along
+    dim 0 into tcfg.microbatch_size-sized slices accumulated with lax.scan
+    (keeps peak activation memory at one-microbatch scale)."""
+
+    use_compress = tcfg.grad_compression != "none"
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatch_size and tcfg.microbatch_size > 0:
+            some = jax.tree.leaves(batch)[0]
+            B = some.shape[0]
+            mb = tcfg.microbatch_size
+            n = B // mb
+            assert n * mb == B, (B, mb)
+            from repro.launch.sharding import DATA_AXES, constrain
+            resh = jax.tree.map(
+                lambda x: constrain(
+                    x.reshape((n, mb) + x.shape[1:]),
+                    None, DATA_AXES, *([None] * (x.ndim - 1)),
+                ),
+                batch,
+            )
+
+            def body(carry, mbatch):
+                acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(params, mbatch)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), resh)
+            g = jax.tree.map(lambda x: x / n, g)
+            return loss_sum / n, g
+        (loss, metrics), g = grad_fn(params, batch)
+        return loss, g
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        params = state["params"]
+        loss, grads = compute_grads(params, batch)
+        metrics: Dict[str, jax.Array] = {"loss": loss}
+        if use_compress:
+            grads, new_err, cm = grad_compress.compress(
+                grads, state["err"],
+                method=tcfg.grad_compression, ratio=tcfg.compression_ratio,
+            )
+            metrics.update(cm)
+        grads, gnorm = optimizer.clip_by_global_norm(grads, tcfg.grad_clip)
+        metrics["grad_norm"] = gnorm
+        new_params, new_opt, om = optimizer.adamw_update(params, grads, state["opt"], tcfg)
+        metrics.update(om)
+        new_state = {"params": new_params, "opt": new_opt}
+        if use_compress:
+            new_state["err"] = new_err
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, key) -> Dict[str, Any]:
+    params = model.init(key)
+    state = {"params": params, "opt": optimizer.init_opt_state(params)}
+    if tcfg.grad_compression != "none":
+        state["err"] = grad_compress.init_error_state(params)
+    return state
+
+
+def train_state_specs(model: Model, tcfg: TrainConfig):
+    """ShapeDtypeStruct pytree of the train state — dry-run, no allocation."""
+    return jax.eval_shape(functools.partial(init_train_state, model, tcfg),
+                          jax.random.key(0))

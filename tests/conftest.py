@@ -1,0 +1,13 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run subprocess sets its own XLA_FLAGS)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,47 @@
+"""Batched multi-query retrieval: equivalence with single-query path and
+encoder-call reduction."""
+import pytest
+
+from repro.config import MemForestConfig
+from repro.core.memforest import MemForestSystem
+from repro.data.synthetic import make_workload
+
+
+@pytest.fixture(scope="module")
+def built():
+    wl = make_workload(num_entities=5, num_sessions=8,
+                       transitions_per_entity=3, num_queries=20, seed=5)
+    mf = MemForestSystem(MemForestConfig())
+    for s in wl.sessions:
+        mf.ingest_session(s)
+    return mf, wl
+
+
+@pytest.mark.parametrize("mode", ["flat", "llm+planner"])
+def test_batched_matches_single(built, mode):
+    mf, wl = built
+    singles = [mf.query(q, mode=mode).answer for q in wl.queries]
+    batched = [r.answer for r in mf.query_batch(wl.queries, mode=mode)]
+    agree = sum(int(a == b) for a, b in zip(singles, batched))
+    assert agree >= len(singles) * 0.9, (agree, len(singles))
+
+
+def test_batched_uses_fewer_encoder_calls(built):
+    mf, wl = built
+    qs = wl.queries[:10]
+    c0 = mf.encoder.stats.calls
+    for q in qs:
+        mf.query(q, mode="emb")
+    seq_calls = mf.encoder.stats.calls - c0
+    c0 = mf.encoder.stats.calls
+    mf.query_batch(qs, mode="emb")
+    batch_calls = mf.encoder.stats.calls - c0
+    assert batch_calls < seq_calls / 2, (batch_calls, seq_calls)
+
+
+def test_batched_accuracy(built):
+    mf, wl = built
+    res = mf.query_batch(wl.queries, mode="llm+planner")
+    acc = sum(int(r.answer.strip().lower() == q.gold.strip().lower())
+              for r, q in zip(res, wl.queries)) / len(wl.queries)
+    assert acc >= 0.8, acc

@@ -1,0 +1,70 @@
+"""Dry-run smoke: the full lower+compile+analyse path on reduced configs and
+a tiny virtual mesh, in a subprocess (so the 8 virtual devices never leak
+into this pytest process, which must see 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=ROOT,
+    )
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "qwen3_moe_235b", "rwkv6_1b6",
+                                  "zamba2_7b", "whisper_base"])
+def test_smoke_dryrun_single_mesh(arch, tmp_path):
+    r = _run_dryrun(["--smoke", "--arch", arch, "--shape", "train_4k",
+                     "--mesh", "single", "--out", str(tmp_path)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    data = json.load(open(tmp_path / f"{arch}__train_4k__single.json"))
+    assert data["ok"]
+    assert data["roofline"]["hlo_flops_total"] > 0
+
+
+def test_smoke_dryrun_multipod_decode(tmp_path):
+    r = _run_dryrun(["--smoke", "--arch", "llama3_8b", "--shape", "decode_32k",
+                     "--mesh", "multi", "--out", str(tmp_path)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    data = json.load(open(tmp_path / f"llama3_8b__decode_32k__multi.json"))
+    assert data["ok"]
+    assert data["mesh_shape"] == [2, 2, 2]
+
+
+def test_device_count_isolation():
+    """This process must see exactly ONE device (XLA_FLAGS only in dryrun)."""
+    import jax
+    assert len(jax.devices()) == 1
+
+
+def test_hlo_collective_parser_units():
+    from repro.launch.hlo_analysis import _shape_bytes, collective_bytes
+    assert _shape_bytes("f32[64,128]") == 64 * 128 * 4
+    assert _shape_bytes("bf16[2,4] f32[8]") == 16 + 32
+    hlo = """
+cond_c (p: (s32[])) -> pred[] {
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%x, %c), direction=LT
+}
+body_c (p: (s32[])) -> (s32[]) {
+  %ar = f32[100]{0} all-reduce(%y), replica_groups=[1,4]<=[4]
+}
+ENTRY main (p: f32[100]) -> f32[100] {
+  %w = (s32[]) while(%t), condition=%cond_c, body=%body_c
+  %ag = f32[200]{0} all-gather(%p), replica_groups=[1,4]<=[4]
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 5 * 400      # trip-count expanded
+    assert out["all-gather"] == 800
+    assert out["total"] == 5 * 400 + 800

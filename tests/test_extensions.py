@@ -1,0 +1,137 @@
+"""Beyond-paper extensions: read-triggered refresh, canonicalization
+properties, elastic re-mesh integration, parser robustness."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import MemForestConfig
+from repro.core.canonical import canonicalize
+from repro.core.forest import Forest
+from repro.core.memforest import MemForestSystem
+from repro.core.types import RawCandidate
+from repro.data.synthetic import make_workload
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# read-triggered lazy refresh
+# ---------------------------------------------------------------------------
+def test_read_triggered_refresh_defers_flush():
+    wl = make_workload(num_entities=4, num_sessions=6, num_queries=10, seed=4)
+    deferred = MemForestSystem(MemForestConfig(read_triggered_refresh=True))
+    eagerly = MemForestSystem(MemForestConfig())
+    for s in wl.sessions:
+        deferred.ingest_session(s)
+        eagerly.ingest_session(s)
+    # ingestion did NOT flush: dirty trees pending, fewer refreshes so far
+    assert deferred.forest.dirty_trees
+    assert deferred.forest.summary_refreshes < eagerly.forest.summary_refreshes
+    # first query pays the flush and answers identically
+    for q in wl.queries:
+        a = deferred.query(q).answer
+        b = eagerly.query(q).answer
+        assert a == b
+    assert not deferred.forest.dirty_trees
+
+
+# ---------------------------------------------------------------------------
+# canonicalization properties
+# ---------------------------------------------------------------------------
+def _cand(subj, attr, val, ts, src=("s0", 0)):
+    return RawCandidate(
+        text=f"{subj} {attr} {val} at {ts}", subject=subj, attribute=attr,
+        value=val, ts=ts, prev_value=None, source=src,
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(dup=st.integers(1, 6), nsub=st.integers(1, 4))
+def test_canonicalize_dedup_idempotent(dup, nsub):
+    """Exact duplicates collapse to one fact with merged sources; running
+    canonicalize twice adds nothing (idempotence)."""
+    forest = Forest(MemForestConfig(embed_dim=16))
+    rng = np.random.default_rng(0)
+    cands = []
+    for i in range(nsub):
+        for d in range(dup):
+            cands.append(_cand(f"Sub{i}", "residence", "Miami", 5.0, (f"s{d}", d)))
+    embs = rng.normal(size=(len(cands), 16)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+    new1 = canonicalize(cands, embs, forest)
+    assert len(new1) == nsub
+    for f in new1:
+        assert len(f.sources) == dup
+    new2 = canonicalize(cands, embs, forest)
+    assert len(new2) == 0  # idempotent vs existing store
+
+
+def test_canonicalize_distinct_timestamps_kept():
+    forest = Forest(MemForestConfig(embed_dim=16))
+    cands = [_cand("Bob", "residence", "Miami", t) for t in (1.0, 5.0, 9.0)]
+    embs = np.eye(16, dtype=np.float32)[:3]
+    new = canonicalize(cands, embs, forest)
+    assert len(new) == 3  # same value, different anchors = history, not dupes
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh: replan -> re-lower on the smaller mesh (smoke, subprocess)
+# ---------------------------------------------------------------------------
+def test_elastic_replan_relowers(tmp_path):
+    from repro.runtime.fault_tolerance import ElasticScaler
+    ladder = ElasticScaler()
+    assert ladder.replan(300) == ((16, 16), ("data", "model"))
+    # prove the smaller smoke mesh actually lowers+compiles after "losing"
+    # devices (8 -> 4): run the dryrun smoke path on a (2,2) mesh
+    code = (
+        "import os;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=4';"
+        "import sys; sys.path.insert(0,'src');"
+        "from repro.configs import get_smoke_config;"
+        "from repro.configs.shapes import SHAPES;"
+        "from repro.config import TrainConfig;"
+        "import dataclasses;"
+        "from repro.launch.mesh import make_mesh;"
+        "from repro.launch.dryrun import run_cell;"
+        "shape=dataclasses.replace(SHAPES['train_4k'],seq_len=64,global_batch=4);"
+        "r=run_cell('llama3_8b','train_4k','single',cfg_override=get_smoke_config('llama3_8b'),"
+        "shape_override=shape,mesh_override=make_mesh((2,2),('data','model')));"
+        "assert r['ok'], r;"
+        "print('ELASTIC_OK')"
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300, cwd=ROOT)
+    assert "ELASTIC_OK" in out.stdout, out.stdout[-1500:] + out.stderr[-1500:]
+
+
+# ---------------------------------------------------------------------------
+# HLO parser robustness
+# ---------------------------------------------------------------------------
+def test_hlo_parser_tolerates_garbage():
+    from repro.launch.hlo_analysis import collective_bytes
+    assert collective_bytes("")["total"] == 0
+    assert collective_bytes("not hlo at all\n{}{}")["total"] == 0
+    nested = """
+cond_a (p: (s32[])) -> pred[] {
+  %c = s32[] constant(3)
+}
+body_inner (p: (s32[])) -> (s32[]) {
+  %ar = f32[10]{0} all-reduce(%x), replica_groups=[1,2]<=[2]
+}
+cond_b (p: (s32[])) -> pred[] {
+  %c2 = s32[] constant(4)
+}
+body_outer (p: (s32[])) -> (s32[]) {
+  %w2 = (s32[]) while(%t), condition=%cond_a, body=%body_inner
+}
+ENTRY main (p: f32[10]) -> f32[10] {
+  %w = (s32[]) while(%t0), condition=%cond_b, body=%body_outer
+}
+"""
+    out = collective_bytes(nested)
+    assert out["all-reduce"] == 4 * 3 * 40  # nested trip counts multiply

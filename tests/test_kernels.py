@@ -1,0 +1,160 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle,
+across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _mk(rng, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,bq,bk", [
+    (1, 128, 4, 4, 32, 64, 64),      # MHA
+    (2, 256, 8, 2, 64, 64, 128),     # GQA 4:1
+    (1, 512, 4, 1, 16, 128, 256),    # MQA
+    (2, 128, 6, 2, 24, 32, 64),      # non-pow2 head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(rng, B, S, Hq, Hkv, D, bq, bk, dtype):
+    q = _mk(rng, (B, S, Hq, D), dtype)
+    k = _mk(rng, (B, S, Hkv, D), dtype)
+    v = _mk(rng, (B, S, Hkv, D), dtype)
+    out_ref = ops.attention(q, k, v, impl="reference")
+    out_pal = ops.attention(q, k, v, impl="pallas_interpret", block_q=bq, block_kv=bk)
+    np.testing.assert_allclose(
+        np.asarray(out_ref, np.float32), np.asarray(out_pal, np.float32),
+        atol=ATOL[dtype], rtol=1e-2,
+    )
+
+
+def test_flash_attention_noncausal(rng):
+    q = _mk(rng, (2, 128, 4, 32))
+    k = _mk(rng, (2, 128, 2, 32))
+    v = _mk(rng, (2, 128, 2, 32))
+    o1 = ops.attention(q, k, v, causal=False, impl="reference")
+    o2 = ops.attention(q, k, v, causal=False, impl="pallas_interpret",
+                       block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=1e-3)
+
+
+def test_blockwise_causal_matches_exact(rng):
+    q = _mk(rng, (2, 192, 4, 16))
+    k = _mk(rng, (2, 192, 2, 16))
+    v = _mk(rng, (2, 192, 2, 16))
+    o1 = ref.attention_ref(q, k, v, causal=True)
+    o2 = ref.blockwise_causal_attention(q, k, v, block_q=64, block_kv=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,Smax,Hq,Hkv,D,bk", [
+    (2, 128, 4, 2, 32, 32),
+    (1, 256, 8, 8, 64, 64),
+    (3, 64, 4, 1, 16, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(rng, B, Smax, Hq, Hkv, D, bk, dtype):
+    q = _mk(rng, (B, Hq, D), dtype)
+    kc = _mk(rng, (B, Smax, Hkv, D), dtype)
+    vc = _mk(rng, (B, Smax, Hkv, D), dtype)
+    lens = jnp.asarray(rng.integers(1, Smax, size=(B,)), jnp.int32)
+    o1 = ops.decode_attention(q, kc, vc, lens, impl="reference")
+    o2 = ops.decode_attention(q, kc, vc, lens, impl="pallas_interpret", block_kv=bk)
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32),
+        atol=ATOL[dtype], rtol=1e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("Q,N,D,K", [(1, 50, 32, 4), (7, 300, 64, 8),
+                                     (16, 1000, 128, 16), (3, 10, 16, 4)])
+def test_topk_sim(rng, Q, N, D, K):
+    q = _mk(rng, (Q, D))
+    keys = _mk(rng, (N, D))
+    v1, i1 = ops.topk_sim(q, keys, K, impl="reference")
+    v2, i2 = ops.topk_sim(q, keys, K, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_topk_sim_num_valid(rng):
+    q = _mk(rng, (2, 16))
+    keys = _mk(rng, (32, 16))
+    padded = jnp.concatenate([keys[:20], jnp.zeros((12, 16))], axis=0)
+    v1, i1 = ops.topk_sim(q, keys[:20], 5, impl="reference")
+    v2, i2 = ops.topk_sim(q, padded, 5, num_valid=20, impl="reference")
+    v3, i3 = ops.topk_sim(q, padded, 5, num_valid=20, impl="pallas_interpret")
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    assert np.array_equal(np.asarray(i1), np.asarray(i3))
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("P,K,D", [(1, 2, 16), (10, 8, 32), (33, 16, 256)])
+def test_tree_refresh(rng, P, K, D):
+    emb = _mk(rng, (P, K, D))
+    mask = jnp.asarray(rng.random((P, K)) > 0.4)
+    # ensure at least one child each
+    mask = mask.at[:, 0].set(True)
+    o1 = ops.tree_refresh(emb, mask, impl="reference")
+    o2 = ops.tree_refresh(emb, mask, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    # unit norm
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(o1), axis=-1), 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,H,K,V,chunk", [
+    (1, 64, 2, 8, 8, 16), (2, 128, 2, 16, 16, 32), (1, 96, 3, 8, 16, 32),
+])
+def test_rwkv6_scan(rng, B, T, H, K, V, chunk):
+    r = _mk(rng, (B, T, H, K), scale=0.5)
+    k = _mk(rng, (B, T, H, K), scale=0.5)
+    v = _mk(rng, (B, T, H, V), scale=0.5)
+    w = _mk(rng, (B, T, H, K), scale=0.5)
+    u = _mk(rng, (H, K), scale=0.5)
+    s0 = _mk(rng, (B, H, K, V), scale=0.1)
+    o1, s1 = ops.rwkv6_scan(r, k, v, w, u, s0, impl="reference")
+    o2, s2 = ops.rwkv6_scan(r, k, v, w, u, s0, impl="pallas_interpret", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4, rtol=1e-2)
+    # chunked jnp (model path) against exact too
+    o3, s3 = ref.rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3), atol=2e-4, rtol=1e-2)
+
+
+def test_rwkv6_decode_step_matches_scan(rng):
+    B, H, K, V = 2, 2, 8, 8
+    r = _mk(rng, (B, 1, H, K)); k = _mk(rng, (B, 1, H, K))
+    v = _mk(rng, (B, 1, H, V)); w = _mk(rng, (B, 1, H, K))
+    u = _mk(rng, (H, K)); s0 = _mk(rng, (B, H, K, V), scale=0.1)
+    o1, s1 = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    o2, s2 = ref.rwkv6_decode_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0], u, s0)
+    np.testing.assert_allclose(np.asarray(o1[:, 0]), np.asarray(o2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,H,P,N,chunk", [
+    (1, 64, 2, 8, 4, 16), (2, 128, 3, 16, 8, 32),
+])
+def test_mamba2_ssd(rng, B, T, H, P, N, chunk):
+    x = _mk(rng, (B, T, H, P))
+    dt = jnp.asarray(rng.random((B, T, H)) * 0.5 + 0.01, jnp.float32)
+    A = -jnp.asarray(rng.random((H,)) + 0.1, jnp.float32)
+    Bm = _mk(rng, (B, T, N))
+    C = _mk(rng, (B, T, N))
+    s0 = _mk(rng, (B, H, P, N), scale=0.1)
+    y1, s1 = ops.mamba2_ssd(x, dt, A, Bm, C, s0, impl="reference")
+    y2, s2 = ops.mamba2_ssd(x, dt, A, Bm, C, s0, impl="pallas_interpret", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4, rtol=1e-2)
+    y3, s3 = ref.mamba2_ssd_chunked(x, dt, A, Bm, C, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y3), atol=2e-4, rtol=1e-2)

@@ -1,0 +1,96 @@
+"""Lifecycle maintenance: delete, migration merge, re-materialization."""
+import numpy as np
+import pytest
+
+from repro.config import MemForestConfig
+from repro.core import maintenance
+from repro.core.memforest import MemForestSystem
+from repro.data.synthetic import make_workload
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return make_workload(num_entities=5, num_sessions=8,
+                         transitions_per_entity=3, num_queries=20, seed=7)
+
+
+def _build(sessions):
+    mf = MemForestSystem(MemForestConfig())
+    for s in sessions:
+        mf.ingest_session(s)
+    return mf
+
+
+def test_delete_session_locality(wl):
+    mf = _build(wl.sessions)
+    sid = wl.sessions[0].session_id
+    before = mf.scale_stats()
+    refreshes_before = mf.forest.summary_refreshes
+    stats = mf.delete_session(sid)
+    after = mf.scale_stats()
+    assert stats["leaves_removed"] > 0
+    assert after["facts"] <= before["facts"]
+    # deletion refreshed only affected paths, not the whole forest
+    touched = mf.forest.summary_refreshes - refreshes_before
+    assert touched < before["nodes"] * 0.5, (touched, before["nodes"])
+    for t in mf.forest.trees.values():
+        t.check_invariants()
+    # deleted session's facts no longer retrievable
+    for q in wl.queries:
+        r = mf.query(q)  # must not crash on tombstones
+
+
+def test_migration_merge_preserves_scale(wl):
+    """Paper Table 10: merged state ~= sequentially-built state (facts within
+    1%, trees within ~8%)."""
+    half = len(wl.sessions) // 2
+    seq = _build(wl.sessions)
+    a = _build(wl.sessions[:half])
+    b = _build(wl.sessions[half:])
+    stats = a.merge_from(b)
+    s_seq, s_mig = seq.scale_stats(), a.scale_stats()
+    assert abs(s_mig["facts"] - s_seq["facts"]) <= max(1, 0.01 * s_seq["facts"])
+    assert abs(s_mig["trees"] - s_seq["trees"]) <= max(2, 0.15 * s_seq["trees"])
+    for t in a.forest.trees.values():
+        t.check_invariants()
+
+
+def test_migration_merge_answers_queries(wl):
+    half = len(wl.sessions) // 2
+    a = _build(wl.sessions[:half])
+    b = _build(wl.sessions[half:])
+    a.merge_from(b)
+    seq = _build(wl.sessions)
+    agree = same = 0
+    for q in wl.queries:
+        ra = a.query(q).answer
+        rs = seq.query(q).answer
+        same += int(ra == rs)
+        agree += 1
+    assert same >= agree * 0.8, f"merged answers diverge: {same}/{agree}"
+
+
+def test_merge_copies_unmatched_trees_without_refresh(wl):
+    """The migration speedup mechanism: unmatched trees are copied verbatim —
+    no summary regeneration for them."""
+    a = _build(wl.sessions[:2])
+    b = _build(wl.sessions[2:4])
+    before = a.forest.summary_refreshes
+    stats = a.merge_from(b)
+    touched = a.forest.summary_refreshes - before
+    copied_nodes = sum(
+        a.forest.trees[k].num_nodes for k in a.forest.trees
+    )
+    assert stats["trees_copied"] > 0
+    # refreshes much smaller than total nodes (only merged trees' paths)
+    assert touched < copied_nodes
+
+
+def test_rematerialize_new_branching(wl):
+    mf = _build(wl.sessions[:4])
+    f2 = maintenance.rematerialize(mf.forest, new_branching=3)
+    assert f2.scale_stats()["facts"] == mf.scale_stats()["facts"]
+    for t in f2.trees.values():
+        t.check_invariants()
+        assert all(len(t.children[i]) <= 3 for i in range(t._n)
+                   if t.alive[i] and t.level[i] > 0)

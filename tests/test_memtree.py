@@ -1,0 +1,144 @@
+"""Property-based tests for MemTree/Forest invariants (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import MemForestConfig
+from repro.core.forest import Forest
+from repro.core.memtree import TreeArena
+
+DIM = 16
+
+
+def _emb(rng, n=1):
+    e = rng.normal(size=(n, DIM)).astype(np.float32)
+    e /= np.linalg.norm(e, axis=1, keepdims=True) + 1e-6
+    return e
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ts_list=st.lists(st.floats(0, 1000, allow_nan=False), min_size=1, max_size=120),
+    k=st.integers(3, 16),
+)
+def test_insert_invariants(ts_list, k):
+    """Temporal leaf order, balance bound, parent ranges, level uniformity —
+    for ANY insertion order and branching factor."""
+    rng = np.random.default_rng(0)
+    t = TreeArena(0, "entity:x", "entity", k, DIM)
+    for i, ts in enumerate(ts_list):
+        t.insert_leaf(i, ts, _emb(rng)[0], f"fact {i}")
+        t.check_invariants()
+    assert t.num_leaves == len(ts_list)
+    # every payload is reachable exactly once
+    leaves = t.leaves_in_order()
+    assert sorted(t.payload[l] for l in leaves) == sorted(range(len(ts_list)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    k=st.integers(3, 8),
+    delete_frac=st.floats(0.1, 0.9),
+)
+def test_delete_invariants(n, k, delete_frac, rng):
+    t = TreeArena(0, "entity:x", "entity", k, DIM)
+    leaves = []
+    for i in range(n):
+        leaves.append(t.insert_leaf(i, float(i), _emb(rng)[0], f"f{i}"))
+    del_ids = list(np.random.default_rng(1).choice(
+        leaves, size=max(1, int(n * delete_frac)), replace=False))
+    for l in del_ids:
+        t.delete_leaf(int(l))
+        t.check_invariants()
+    assert t.num_leaves == n - len(del_ids)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 100), k=st.integers(3, 8))
+def test_dirty_path_coalescing(n, k):
+    """After any batch of inserts, dirty set = union of leaf-to-root paths;
+    ancestors of any dirty node are dirty (coalescing invariant)."""
+    rng = np.random.default_rng(2)
+    t = TreeArena(0, "s", "entity", k, DIM)
+    for i in range(n):
+        t.insert_leaf(i, float(rng.random() * 100), _emb(rng)[0], f"f{i}")
+    for node in t.dirty:
+        p = t.parent[node]
+        if p != -1 and t.alive[node]:
+            assert p in t.dirty, "dirty node with clean parent"
+
+
+def test_height_is_logarithmic(rng):
+    t = TreeArena(0, "s", "entity", 8, DIM)
+    import math
+    for i in range(1000):
+        t.insert_leaf(i, float(i), _emb(rng)[0], f"f{i}")
+    assert t.height <= math.ceil(math.log(1000, 4)) + 1  # k/2 = 4 min fill
+    t.check_invariants()
+
+
+def test_flush_refreshes_all_dirty(rng):
+    cfg = MemForestConfig(branching_factor=4, embed_dim=DIM)
+    f = Forest(cfg)
+    for i in range(40):
+        f.insert_item("entity:bob", "entity", "fact", i, float(i),
+                      _emb(rng)[0], f"fact number {i}")
+    stats = f.flush()
+    tree = f.trees["entity:bob"]
+    assert not tree.dirty
+    assert stats["refreshes"] > 0
+    assert stats["levels"] == tree.height
+    # summaries are unit-norm and nonzero for every internal node
+    for nid in range(tree._n):
+        if tree.alive[nid] and tree.level[nid] > 0:
+            assert abs(np.linalg.norm(tree.emb[nid]) - 1.0) < 1e-3
+
+
+def test_refresh_summary_consistency(rng):
+    """Parent embedding == normalized mean of child embeddings (Algorithm 1
+    semantics), verified against a manual recomputation."""
+    cfg = MemForestConfig(branching_factor=4, embed_dim=DIM)
+    f = Forest(cfg)
+    for i in range(20):
+        f.insert_item("entity:a", "entity", "fact", i, float(i),
+                      _emb(rng)[0], f"f{i}")
+    f.flush()
+    t = f.trees["entity:a"]
+    for nid in range(t._n):
+        if not t.alive[nid] or t.level[nid] == 0:
+            continue
+        kids = t.children[nid]
+        mean = np.mean([t.emb[c] for c in kids], axis=0)
+        mean /= np.linalg.norm(mean) + 1e-6
+        np.testing.assert_allclose(t.emb[nid], mean, atol=1e-4)
+
+
+def test_lazy_coalescing_saves_refreshes(rng):
+    """Batch flush must refresh each shared ancestor ONCE (paper Fig. 6a)."""
+    cfg = MemForestConfig(branching_factor=4, embed_dim=DIM)
+    lazy = Forest(cfg)
+    eager = Forest(cfg)
+    for i in range(64):
+        for fst in (lazy, eager):
+            fst.insert_item("entity:a", "entity", "fact", i, float(i),
+                            _emb(rng)[0], f"f{i}")
+        eager.eager_refresh_path("entity:a")
+    lazy.flush()
+    assert lazy.summary_refreshes < eager.summary_refreshes
+
+
+def test_level_parallel_equals_sequential(rng):
+    """level_parallel=True/False produce identical summaries (parallelism is
+    a schedule, not a semantics change)."""
+    cfg = MemForestConfig(branching_factor=4, embed_dim=DIM)
+    a, b = Forest(cfg), Forest(cfg)
+    for i in range(50):
+        e = _emb(rng)[0]
+        a.insert_item("entity:x", "entity", "fact", i, float(i), e, f"f{i}")
+        b.insert_item("entity:x", "entity", "fact", i, float(i), e, f"f{i}")
+    ra = a.flush(level_parallel=True)
+    rb = b.flush(level_parallel=False)
+    ta, tb = a.trees["entity:x"], b.trees["entity:x"]
+    np.testing.assert_allclose(ta.emb[:ta._n], tb.emb[:tb._n], atol=1e-5)
+    assert ra["kernel_calls"] < rb["kernel_calls"]  # batching actually batched

@@ -1,0 +1,54 @@
+"""Roofline analytics: model-flops identities and term sanity."""
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.launch.roofline import analytic_bytes, analytic_flops, roofline_terms
+
+
+def test_dense_flops_close_to_6nd():
+    """For a dense LM at moderate context, analytic hlo-equivalent train
+    FLOPs should be within ~2x of the 6ND rule (remat adds ~4/3, attention
+    adds the quadratic term)."""
+    cfg = get_config("llama3_8b")
+    shape = SHAPES["train_4k"]
+    fl = analytic_flops(cfg, shape)
+    ratio = fl.hlo_equiv / fl.model_flops
+    assert 1.0 < ratio < 2.2, ratio
+
+
+def test_moe_active_params_flops():
+    cfg = get_config("qwen3_moe_235b")
+    shape = SHAPES["train_4k"]
+    fl = analytic_flops(cfg, shape)
+    assert fl.model_flops < 6 * cfg.param_count() * shape.seq_len * shape.global_batch * 0.25
+
+
+def test_decode_is_memory_bound():
+    cfg = get_config("llama3_8b")
+    t = roofline_terms(cfg, SHAPES["decode_32k"], num_devices=256, tp=16,
+                       collective_bytes_per_dev=0.0)
+    assert t["dominant"] == "memory"
+    assert t["bytes_cache"] > t["bytes_weights"] * 0.5
+
+
+def test_ssm_decode_state_not_quadratic():
+    """RWKV6 long-context decode bytes are context-independent (state-based)."""
+    cfg = get_config("rwkv6_1b6")
+    b32 = analytic_bytes(cfg, SHAPES["decode_32k"], num_devices=256, tp=16)
+    import dataclasses
+    long_shape = SHAPES["long_500k"]
+    blong = analytic_bytes(cfg, long_shape, num_devices=256, tp=16)
+    # per-sequence state traffic identical despite 16x context
+    per_seq_32 = b32.cache / SHAPES["decode_32k"].global_batch * (256 / 16)
+    per_seq_long = blong.cache / long_shape.global_batch * (256 / 16)
+    assert abs(per_seq_32 - per_seq_long) / per_seq_long < 1e-6
+
+
+def test_terms_scale_with_devices():
+    cfg = get_config("llama3_8b")
+    t256 = roofline_terms(cfg, SHAPES["train_4k"], num_devices=256, tp=16,
+                          collective_bytes_per_dev=1e9)
+    t512 = roofline_terms(cfg, SHAPES["train_4k"], num_devices=512, tp=16,
+                          collective_bytes_per_dev=1e9)
+    assert t512["compute_s"] < t256["compute_s"]

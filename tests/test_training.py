@@ -1,0 +1,106 @@
+"""Training substrate: optimization, microbatching, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.configs import get_smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.models import get_model
+from repro.training import grad_compress, optimizer
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_8b")
+    model = get_model(cfg)
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    return cfg, model, pipe
+
+
+def test_loss_decreases_on_fixed_batch(setup):
+    cfg, model, pipe = setup
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=50, warmup_steps=2)
+    state = init_train_state(model, tcfg, jax.random.key(0))
+    step = jax.jit(make_train_step(model, tcfg))
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    losses = []
+    for _ in range(10):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5
+
+
+def test_microbatching_matches_full_batch(setup):
+    cfg, model, pipe = setup
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(1).items()}
+    t_full = TrainConfig(learning_rate=1e-3, microbatch_size=0)
+    t_micro = TrainConfig(learning_rate=1e-3, microbatch_size=2)
+    s0 = init_train_state(model, t_full, jax.random.key(0))
+    s1, m1 = jax.jit(make_train_step(model, t_full))(s0, batch)
+    s2, m2 = jax.jit(make_train_step(model, t_micro))(s0, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), atol=2e-2, rtol=2e-2)
+    w1 = np.asarray(jax.tree.leaves(s1["params"])[0], np.float32)
+    w2 = np.asarray(jax.tree.leaves(s2["params"])[0], np.float32)
+    np.testing.assert_allclose(w1, w2, atol=5e-2, rtol=5e-2)
+
+
+def test_lr_schedule():
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lr0 = float(optimizer.lr_schedule(jnp.asarray(0), tcfg))
+    lr10 = float(optimizer.lr_schedule(jnp.asarray(10), tcfg))
+    lr100 = float(optimizer.lr_schedule(jnp.asarray(100), tcfg))
+    assert lr0 < lr10
+    assert abs(lr10 - 1e-3) < 1e-5
+    assert lr100 < lr10 * 0.2
+
+
+def test_grad_clip():
+    g = {"w": jnp.full((10,), 100.0)}
+    clipped, norm = optimizer.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    assert abs(float(optimizer.global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_topk_compression_error_feedback():
+    """Error feedback: the residual stays BOUNDED and the running average of
+    compressed grads converges to the true grad (nothing permanently lost)."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)}
+    err = grad_compress.init_error_state(g)
+    total_comp = jnp.zeros((64,))
+    devs = []
+    for t in range(1, 121):
+        comp, err, _ = grad_compress.compress(g, err, method="topk", ratio=0.1)
+        total_comp = total_comp + comp["w"]
+        if t in (30, 120):
+            devs.append(float(jnp.max(jnp.abs(total_comp / t - g["w"]))))
+    # residual bounded (error feedback flushes every coordinate eventually)
+    assert float(jnp.max(jnp.abs(err["w"]))) < 30.0
+    # running average converges: deviation shrinks ~1/T
+    assert devs[1] < devs[0] / 2, devs
+    assert devs[1] < 0.5
+
+
+def test_int8_compression_bounded_error():
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(128,)), jnp.float32)}
+    err = grad_compress.init_error_state(g)
+    comp, err, m = grad_compress.compress(g, err, method="int8")
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+    assert float(jnp.max(jnp.abs(comp["w"] - g["w"]))) <= scale * 0.51
+    assert float(m["compress_ratio"]) == 0.5
+
+
+def test_compressed_training_still_learns(setup):
+    cfg, model, pipe = setup
+    tcfg = TrainConfig(learning_rate=1e-3, grad_compression="topk",
+                       compression_ratio=0.25)
+    state = init_train_state(model, tcfg, jax.random.key(0))
+    step = jax.jit(make_train_step(model, tcfg))
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    losses = []
+    for _ in range(12):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
