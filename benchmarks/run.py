@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
   bench_tree_scaling   Figure 6a-e         (lazy refresh, build, parallel, k)
   bench_chunk_sweep    Table 8             (extraction operating point)
   bench_kernels        (kernel layer)      (per-kernel µs + ref deltas)
+  bench_ingest_batch   (beyond paper)      (cross-tenant batched write path)
 """
 from __future__ import annotations
 
@@ -21,6 +22,7 @@ import traceback
 from benchmarks import (
     bench_accuracy,
     bench_chunk_sweep,
+    bench_ingest_batch,
     bench_kernels,
     bench_migration,
     bench_query_latency,
@@ -30,6 +32,7 @@ from benchmarks import (
 
 SUITES = {
     "write_path": bench_write_path.run,
+    "ingest_batch": bench_ingest_batch.run,
     "query_latency": bench_query_latency.run,
     "accuracy": bench_accuracy.run,
     "migration": bench_migration.run,

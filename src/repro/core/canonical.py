@@ -27,51 +27,85 @@ def canonicalize(
     sim_threshold: float = 0.92,
 ) -> List[CanonicalFact]:
     """Returns the NEW canonical facts (already registered in the forest's
-    fact store). Duplicates merge their source references instead."""
-    new_facts: List[CanonicalFact] = []
-    batch_seen = {}
+    fact store). Duplicates merge their source references instead.
 
-    # existing-key lookup (persistent state read, host-side hash — not an
-    # LLM call; this is exactly what makes the write path state-size-free)
+    One-group form of :func:`canonicalize_batch` — a single definition of
+    the dedup rules keeps the batched/sequential state-equivalence contract
+    unbreakable by one-sided edits."""
+    return canonicalize_batch([(candidates, embs)], forest, sim_threshold)[0]
+
+
+def canonicalize_batch(
+    groups: List[Tuple[List[RawCandidate], Optional[np.ndarray]]],
+    forest: Forest,
+    sim_threshold: float = 0.92,
+) -> List[List[CanonicalFact]]:
+    """Multi-session canonicalization in a SINGLE pass (one group per
+    session, in arrival order). Semantics match calling :func:`canonicalize`
+    once per group in order — same facts, same ids, same merged sources —
+    but the two hot costs are batch-amortized:
+
+      * the existing-key map over the fact store is built ONCE per batch
+        instead of once per session (the per-session rebuild is O(|facts|),
+        which made a sequential ingest loop quadratic in stored facts);
+      * the near-duplicate similarity scan inside each group is one gemm
+        over the group's fact-index rows (``embs @ embs.T``) instead of a
+        python pair loop — the vectorized similarity gate.
+
+    Returns the per-group lists of NEW canonical facts (registered in the
+    forest's fact store, in group order)."""
     existing = {}
     for f in forest.facts:
         if forest.fact_alive[f.fact_id]:
-            existing[(_norm(f.subject), _norm(f.attribute), _norm(f.value), round(f.ts, 1))] = f
+            existing[(_norm(f.subject), _norm(f.attribute), _norm(f.value),
+                      round(f.ts, 1))] = f
 
-    for i, c in enumerate(candidates):
-        key = (_norm(c.subject), _norm(c.attribute), _norm(c.value), round(c.ts, 1))
-        if key in batch_seen:
-            batch_seen[key].sources.append(c.source)
-            continue
-        if key in existing:
-            existing[key].sources.append(c.source)
-            continue
-        fact = CanonicalFact(
-            fact_id=-1,
-            text=c.text,
-            subject=c.subject.strip(),
-            attribute=c.attribute.strip(),
-            value=c.value.strip(),
-            ts=c.ts,
-            prev_value=c.prev_value,
-            sources=[c.source],
-            emb=embs[i] if embs is not None else None,
-        )
-        # embedding near-duplicate check within subject+attribute
-        dup = None
-        if embs is not None:
-            for nf in new_facts:
-                if (_norm(nf.subject), _norm(nf.attribute)) == key[:2] and \
-                        float(nf.emb @ fact.emb) >= sim_threshold and \
-                        _norm(nf.value) == key[2]:
-                    dup = nf
-                    break
-        if dup is not None:
-            dup.sources.append(c.source)
-            continue
-        batch_seen[key] = fact
-        new_facts.append(fact)
+    out: List[List[CanonicalFact]] = []
+    for candidates, embs in groups:
+        new_facts: List[CanonicalFact] = []
+        new_idx: List[int] = []            # candidate index of each new fact
+        batch_seen = {}
+        sims = embs @ embs.T if embs is not None and len(candidates) else None
 
-    for f in new_facts:
-        forest.add_fact(f)
-    return new_facts
+        for i, c in enumerate(candidates):
+            key = (_norm(c.subject), _norm(c.attribute), _norm(c.value), round(c.ts, 1))
+            if key in batch_seen:
+                batch_seen[key].sources.append(c.source)
+                continue
+            if key in existing:
+                existing[key].sources.append(c.source)
+                continue
+            dup = None
+            if sims is not None:
+                for nf, j in zip(new_facts, new_idx):
+                    if (_norm(nf.subject), _norm(nf.attribute)) == key[:2] and \
+                            float(sims[i, j]) >= sim_threshold and \
+                            _norm(nf.value) == key[2]:
+                        dup = nf
+                        break
+            if dup is not None:
+                dup.sources.append(c.source)
+                continue
+            fact = CanonicalFact(
+                fact_id=-1,
+                text=c.text,
+                subject=c.subject.strip(),
+                attribute=c.attribute.strip(),
+                value=c.value.strip(),
+                ts=c.ts,
+                prev_value=c.prev_value,
+                sources=[c.source],
+                emb=embs[i] if embs is not None else None,
+            )
+            batch_seen[key] = fact
+            new_facts.append(fact)
+            new_idx.append(i)
+
+        for f in new_facts:
+            forest.add_fact(f)
+            # later groups must see this group's facts as existing state,
+            # exactly as sequential per-session canonicalize calls would
+            existing[(_norm(f.subject), _norm(f.attribute), _norm(f.value),
+                      round(f.ts, 1))] = f
+        out.append(new_facts)
+    return out

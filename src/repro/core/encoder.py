@@ -38,20 +38,56 @@ _STOP = frozenset(
 )
 
 
+# vocabulary-level id caches (what a trained tokenizer's vocab table is):
+# unigram/bigram hashing is pure, and natural-language token vocabularies
+# are small, so memoizing ids takes the per-token crc32+encode off the
+# write path's host floor. Size-capped: arbitrary alphanumeric tokens (ids,
+# hashes) would otherwise grow the dicts without bound in a long-lived
+# serving process — on overflow we just stop inserting (misses stay cheap).
+_VOCAB_CACHE_MAX = 1 << 16
+_UNI_IDS: dict = {}
+_BI_IDS: dict = {}
+
+
 def _tokenize(text: str) -> List[int]:
     toks = [t for t in _TOKEN_RE.findall(text.lower()) if t not in _STOP]
-    ids = []
-    for i, t in enumerate(toks):
-        ids.append(_stable_hash(t) % _HASH_BUCKETS)
-        if i + 1 < len(toks):
-            ids.append(_stable_hash(t + "_" + toks[i + 1]) % _HASH_BUCKETS)
+    ids: List[int] = []
+    append = ids.append
+    prev = None
+    for t in toks:
+        if prev is not None:
+            b = _BI_IDS.get((prev, t))
+            if b is None:
+                b = _stable_hash(prev + "_" + t) % _HASH_BUCKETS
+                if len(_BI_IDS) < _VOCAB_CACHE_MAX:
+                    _BI_IDS[(prev, t)] = b
+            append(b)
+        u = _UNI_IDS.get(t)
+        if u is None:
+            u = _stable_hash(t) % _HASH_BUCKETS
+            if len(_UNI_IDS) < _VOCAB_CACHE_MAX:
+                _UNI_IDS[t] = u
+        append(u)
+        prev = t
     return ids or [0]
 
 
-@functools.partial(jax.jit, static_argnames=("dim",))
-def _project(counts: jax.Array, table: jax.Array, dim: int) -> jax.Array:
-    """counts: (B, BUCKETS) sparse-ish count vectors -> (B, dim) normalized."""
-    h = jnp.tanh(counts @ table)
+@functools.partial(jax.jit, static_argnames=("num_rows",))
+def _project(flat_ids: jax.Array, seg: jax.Array, table: jax.Array,
+             num_rows: int) -> jax.Array:
+    """flat_ids: (N,) bucket ids across all texts, seg: (N,) row index per
+    token (sorted; padding tokens carry seg == num_rows) -> (num_rows, dim).
+
+    Computes tanh(counts @ table) in token-gather/segment-sum form: the
+    per-row sum of table rows is the same bucket-count contraction without
+    materializing either the (B, BUCKETS) dense count matrix or a (B, L)
+    padded id matrix — host->device traffic and gather work scale with the
+    REAL token count, not with batch x longest-text padding, which keeps
+    large mixed-length cross-session ingest batches bandwidth-cheap."""
+    contrib = jax.ops.segment_sum(
+        table[flat_ids], seg, num_segments=num_rows + 1,
+        indices_are_sorted=True)[:num_rows]
+    h = jnp.tanh(contrib)
     n = jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6
     return h / n
 
@@ -96,20 +132,27 @@ class HashingEncoder:
 
     def _encode_batch(self, texts: Sequence[str]) -> np.ndarray:
         n = len(texts)
-        # pad batch to a power-of-two bucket: bounded jit-compile set
+        # pad batch rows AND the flat token stream to power-of-two buckets:
+        # bounded jit-compile set across the system's lifetime
         cap = 1
         while cap < n:
             cap *= 2
-        counts = np.zeros((cap, _HASH_BUCKETS), np.float32)
-        ntok = 0
-        for i, t in enumerate(texts):
-            ids = _tokenize(t)
-            ntok += len(ids)
-            np.add.at(counts[i], ids, 1.0)
+        id_lists = [_tokenize(t) for t in texts]
+        ntok = sum(len(ids) for ids in id_lists)
+        cap_tok = 16
+        while cap_tok < ntok:
+            cap_tok *= 2
+        flat = np.zeros(cap_tok, np.int32)
+        seg = np.full(cap_tok, cap, np.int32)   # padding -> scratch segment
+        pos = 0
+        for i, ids in enumerate(id_lists):
+            flat[pos:pos + len(ids)] = ids
+            seg[pos:pos + len(ids)] = i
+            pos += len(ids)
         self.stats.calls += 1
         self.stats.tokens += ntok
         self.stats.texts += n
-        out = _project(jnp.asarray(counts), self._table, self.dim)
+        out = _project(jnp.asarray(flat), jnp.asarray(seg), self._table, cap)
         return np.asarray(out)[:n]
 
     def encode_one(self, text: str) -> np.ndarray:

@@ -46,6 +46,19 @@ def extract_candidates(
     return cands[:max_facts]
 
 
+class SessionExtraction:
+    """Per-session extraction output (one element of an extract_sessions
+    batch): mirrors the extract_session tuple, plus the session itself."""
+
+    __slots__ = ("session", "candidates", "fact_embs", "cells")
+
+    def __init__(self, session, candidates, fact_embs, cells):
+        self.session = session
+        self.candidates = candidates
+        self.fact_embs = fact_embs
+        self.cells = cells
+
+
 class ParallelExtractor:
     """Batched (= parallel) chunk extraction."""
 
@@ -84,6 +97,53 @@ class ParallelExtractor:
         )
         return candidates, fact_embs, cells, stats
 
+    def extract_sessions(self, sessions: Sequence[Session]):
+        """Cross-session batched extraction: the union of every session's
+        chunk texts AND candidate texts is embedded in ONE encoder forward
+        (chunks are independent across sessions just as within one, and
+        candidate parsing is host-side, so nothing serializes on the model).
+        Dependency depth stays 1 regardless of batch size.
+
+        Returns ([SessionExtraction, ...], WriteStats)."""
+        t0 = time.perf_counter()
+        per_chunks: List[List[Tuple[int, str, float]]] = []
+        per_cands: List[List[RawCandidate]] = []
+        texts: List[str] = []
+        for session in sessions:
+            chunks = chunk_session(session, self.b)
+            per_chunks.append(chunks)
+            texts.extend(c[1] for c in chunks)
+            cands: List[RawCandidate] = []
+            for idx, text, ts in chunks:
+                cands.extend(
+                    extract_candidates(text, (session.session_id, idx), self.max_facts)
+                )
+            per_cands.append(cands)
+        for cands in per_cands:
+            texts.extend(c.text for c in cands)
+        embs = self.encoder.encode(texts)             # ONE cross-session batch
+
+        out: List[SessionExtraction] = []
+        pos = 0
+        for session, chunks in zip(sessions, per_chunks):
+            cells = [
+                DialogueCell(-1, session.session_id, idx, text, ts, embs[pos + i])
+                for i, (idx, text, ts) in enumerate(chunks)
+            ]
+            pos += len(chunks)
+            out.append(SessionExtraction(session, None, None, cells))
+        for ext, cands in zip(out, per_cands):
+            ext.candidates = cands
+            ext.fact_embs = embs[pos:pos + len(cands)] if cands else None
+            pos += len(cands)
+
+        stats = WriteStats(
+            wall_s=time.perf_counter() - t0,
+            llm_dependency_depth=1 if texts else 0,
+            facts_written=sum(len(c) for c in per_cands),
+        )
+        return out, stats
+
 
 class SequentialExtractor:
     """Serialized extraction (what a single LLM pass over the session looks
@@ -115,3 +175,14 @@ class SequentialExtractor:
             facts_written=len(candidates),
         )
         return candidates, fact_embs, cells, stats
+
+    def extract_sessions(self, sessions: Sequence[Session]):
+        """Serialized fallback: per-session extraction in a loop (the cost
+        model stays honest — no cross-session batching)."""
+        out: List[SessionExtraction] = []
+        agg = WriteStats()
+        for session in sessions:
+            candidates, fact_embs, cells, st = self.extract_session(session)
+            out.append(SessionExtraction(session, candidates, fact_embs, cells))
+            agg.add(st)
+        return out, agg

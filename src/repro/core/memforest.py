@@ -16,6 +16,7 @@ from typing import Dict, List, Optional
 from repro.config import MemForestConfig
 from repro.core import canonical, extraction, maintenance, routing
 from repro.core.forest import Forest
+from repro.core.ingest import IngestBatcher
 from repro.core.retrieval import Retriever, answer_query
 from repro.core.types import Query, QueryResult, Session, WriteStats
 
@@ -40,6 +41,7 @@ class MemForestSystem:
             self.extractor = extraction.SequentialExtractor(
                 self.encoder, chunk_turns=self.config.chunk_turns
             )
+        self.batcher = IngestBatcher(self.forest, self.extractor, self.config)
         self.retriever = Retriever(self.forest, self.encoder, self.config)
         self.write_stats = WriteStats()
 
@@ -80,6 +82,22 @@ class MemForestSystem:
             facts_written=len(facts),
         )
         self.write_stats.add(stats)
+        return stats
+
+    def ingest_batch(self, sessions: List[Session]) -> List[WriteStats]:
+        """Batched write path: N sessions, ONE encoder forward, ONE lazy
+        flush whose tree_refresh batches span every session's dirty trees
+        (cross-tenant parallelism). State-equivalent to calling
+        ingest_session on each session in order.
+
+        Eager mode has no batch form (it refreshes per insert by
+        definition), so it falls back to the sequential loop."""
+        if self.eager:
+            return [self.ingest_session(s) for s in sessions]
+        stats = self.batcher.ingest(
+            sessions, flush=not self.config.read_triggered_refresh)
+        for s in stats:
+            self.write_stats.add(s)
         return stats
 
     # ------------------------------------------------------------------
@@ -152,4 +170,5 @@ class MemForestSystem:
         sys_ = cls(forest.config, encoder)
         sys_.forest = forest
         sys_.retriever.forest = forest
+        sys_.batcher.forest = forest
         return sys_

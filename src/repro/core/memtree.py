@@ -190,6 +190,11 @@ class TreeArena:
                 self.parent[c] = right
             self.end_ts[node] = max(self.end_ts[c] for c in left_kids)
             self.start_ts[node] = self.start_ts[left_kids[0]]
+            # the left half keeps the old summary but lost half its
+            # children — without a dirty mark it would stay stale through
+            # the next flush (its ancestors are on the insert path, so the
+            # dirty invariant still holds)
+            self.dirty.add(node)
             p = self.parent[node]
             if p == -1:
                 new_root = self._alloc(self.level[node] + 1,
@@ -205,6 +210,10 @@ class TreeArena:
             kids_p.insert(kids_p.index(node) + 1, right)
             self.parent[right] = p
             self.dirty.add(right)
+            # p's child set changed; mark its path explicitly — the caller's
+            # leaf-path marking would break early at the already-dirty half
+            # and leave p (and its ancestors) stale
+            self._mark_dirty_path(p)
             node = p
 
     def _mark_dirty_path(self, node: int) -> None:

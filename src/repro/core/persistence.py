@@ -1,7 +1,8 @@
 """Durable persistence for the memory substrate (paper §3.1: "persistent
 state is the source of truth ... derived artifacts can be regenerated").
 
-Snapshot format (msgpack + zstd, single file):
+Snapshot format (msgpack + tagged compression — zstd when available, stdlib
+zlib fallback — single file):
   * persistent state: canonical facts, dialogue cells, scope assignments,
     tree STRUCTURE, placement maps, session registry, scene cluster state;
   * derived artifacts (node embeddings, summaries, root rows) are stored
@@ -18,8 +19,8 @@ from typing import Any, Dict, Optional
 
 import msgpack
 import numpy as np
-import zstandard as zstd
 
+from repro import compression
 from repro.config import MemForestConfig
 from repro.core.forest import Forest
 from repro.core.memtree import TreeArena
@@ -80,8 +81,7 @@ def save_forest(forest: Forest, path: str, *, with_derived: bool = True) -> str:
         "scene_counts": list(forest.scene_counts),
         "with_derived": with_derived,
     }
-    payload = zstd.ZstdCompressor(level=3).compress(
-        msgpack.packb(doc, use_bin_type=True))
+    payload = compression.compress(msgpack.packb(doc, use_bin_type=True))
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(payload)
@@ -95,8 +95,7 @@ def load_forest(path: str, config: Optional[MemForestConfig] = None,
                 *, rematerialize_derived: bool = False,
                 kernel_impl: str = "reference") -> Forest:
     with open(path, "rb") as f:
-        doc = msgpack.unpackb(zstd.ZstdDecompressor().decompress(f.read()),
-                              raw=False)
+        doc = msgpack.unpackb(compression.decompress(f.read()), raw=False)
     assert doc["version"] == FORMAT_VERSION
     cfg = config or MemForestConfig(
         chunk_turns=doc["config"]["chunk_turns"],

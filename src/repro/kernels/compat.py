@@ -1,0 +1,11 @@
+"""Pallas API compat across JAX versions.
+
+``pltpu.CompilerParams`` is the current name; the pinned JAX still calls it
+``TPUCompilerParams``. Kernels import :data:`CompilerParams` from here so the
+same source builds against either.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

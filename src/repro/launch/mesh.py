@@ -10,18 +10,41 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+# jax.sharding.AxisType landed after the pinned JAX version; older
+# jax.make_mesh has no axis_types kwarg, and its default (auto) matches what
+# we want — so only pass the kwarg when the running JAX understands it.
+try:
+    from jax.sharding import AxisType as _AxisType
+except ImportError:
+    _AxisType = None
+
+
+def _make(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     """Arbitrary mesh (elastic re-mesh ladder, tests)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
+
+
+def activate_mesh(mesh: Mesh):
+    """Compat for ``jax.set_mesh`` (newer JAX): on older versions the Mesh
+    object itself is the context manager that installs the thread-local mesh."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
 
 
 def make_host_mesh(model_parallel: int = 1) -> Optional[Mesh]:

@@ -16,7 +16,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.kernels import ops, ref
-from repro.launch.sharding import DATA_AXES, MODEL_AXIS, constrain
+from repro.launch.sharding import DATA_AXES, MODEL_AXIS, constrain, get_abstract_mesh
+
+# jax.shard_map was promoted out of jax.experimental after the pinned version
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 Params = Dict[str, jax.Array]
 
@@ -40,7 +46,7 @@ def heads_axis(num_heads: int):
     """`model` if the head count divides evenly over the mesh's model axis,
     else None (replicate — avoids involuntary SPMD remat on GQA kv heads
     narrower than the TP width)."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am.empty or MODEL_AXIS not in am.axis_names:
         return None
     size = dict(am.shape)[MODEL_AXIS]
@@ -308,7 +314,7 @@ def moe_block(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax
         frac = jnp.zeros((E,), jnp.float32).at[gi.reshape(-1)].add(1.0) / (probs.shape[0] * K)
         return gw, gi, E * jnp.sum(frac * me)
 
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     names = () if am.empty else tuple(am.axis_names)
     if MODEL_AXIS in names and E % dict(am.shape)[MODEL_AXIS] == 0:
         tp = dict(am.shape)[MODEL_AXIS]
@@ -347,7 +353,7 @@ def moe_block(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax
 
         pspec_x = P(dp_axes if dp_axes else None, None, None)
         pspec_w = P(MODEL_AXIS, fsdp_axes if fsdp_axes else None, None)
-        y, aux = jax.shard_map(
+        y, aux = _shard_map(
             local, mesh=am,
             in_specs=(pspec_x, pspec_w, pspec_w, pspec_w),
             out_specs=(pspec_x, P()),

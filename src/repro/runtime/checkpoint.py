@@ -4,7 +4,8 @@ Layout:
     <dir>/step_<N>.tmp/...   (write phase)
     <dir>/step_<N>/
         manifest.json        (tree structure, shapes, dtypes, metadata)
-        shard_<i>.bin        (zstd-compressed msgpack of leaf buffers)
+        shard_<i>.bin        (compressed msgpack of leaf buffers; zstd when
+                             available, stdlib zlib otherwise — tagged)
 
 Commit = fsync files -> atomic rename of the directory -> update LATEST file.
 A crash mid-write leaves only a .tmp directory, which restore() ignores —
@@ -23,9 +24,10 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import msgpack
 import numpy as np
-import zstandard as zstd
 
 import jax
+
+from repro import compression
 
 _LEAVES_PER_SHARD = 64
 
@@ -61,7 +63,6 @@ def save(ckpt_dir: str, step: int, state: Any, *, extra: Optional[Dict] = None,
         "num_processes": jax.process_count(),
         "leaves": [],
     }
-    cctx = zstd.ZstdCompressor(level=3)
     shard_idx = 0
     buf: List[Tuple[str, bytes, str, List[int]]] = []
 
@@ -74,7 +75,7 @@ def save(ckpt_dir: str, step: int, state: Any, *, extra: Optional[Dict] = None,
         )
         fname = f"shard_{shard_idx:04d}.bin"
         with open(os.path.join(tmp, fname), "wb") as f:
-            f.write(cctx.compress(payload))
+            f.write(compression.compress(payload))
             f.flush()
             os.fsync(f.fileno())
         for p, _d, dt, sh in buf:
@@ -145,12 +146,11 @@ def restore(ckpt_dir: str, state_like: Any, step: Optional[int] = None
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
 
-    dctx = zstd.ZstdDecompressor()
     by_path: Dict[str, np.ndarray] = {}
     shards = {e["shard"] for e in manifest["leaves"]}
     for fname in shards:
         with open(os.path.join(path, fname), "rb") as f:
-            payload = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+            payload = msgpack.unpackb(compression.decompress(f.read()), raw=False)
         for p, data, dt, sh in payload:
             by_path[p] = np.frombuffer(data, dtype=dt).reshape(sh)
 

@@ -9,6 +9,12 @@ prompt prefixes and can be amortized by prefix caching", realized.
 Continuous batching: fixed slot array; finished sequences are evicted and
 queued requests admitted between decode steps, so occupancy stays high under
 ragged output lengths.
+
+Ingest lane: when the engine is built with a memory system, whole-session
+write requests queue alongside decode traffic and drain between decode steps
+as ONE ``ingest_batch`` call per engine iteration — write traffic rides the
+same continuous-batching loop, so concurrent tenants' sessions share encoder
+forwards and tree_refresh launches (core/ingest.py).
 """
 from __future__ import annotations
 
@@ -60,7 +66,8 @@ class PrefixCache:
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
-                 max_len: int = 512, eos_id: int = 2):
+                 max_len: int = 512, eos_id: int = 2,
+                 memory=None, max_ingest_batch: int = 16):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -75,6 +82,15 @@ class ServeEngine:
         self.steps = 0
         self.decoded_tokens = 0
         self.occupancy_sum = 0.0
+        # ingest-request lane: write traffic (whole sessions bound for the
+        # memory substrate) rides the same engine loop as decode slots —
+        # everything queued between two engine steps drains as ONE
+        # MemForestSystem.ingest_batch call (cross-tenant write batching)
+        self.memory = memory
+        self.max_ingest_batch = max_ingest_batch
+        self.ingest_queue: List = []
+        self.ingest_batches = 0
+        self.ingest_sessions = 0
 
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len)
@@ -89,6 +105,24 @@ class ServeEngine:
         self._next_id += 1
         self.queue.append(r)
         return r.req_id
+
+    def submit_session(self, session) -> None:
+        """Queue a session for the ingest lane (requires a memory system)."""
+        if self.memory is None:
+            raise RuntimeError("ServeEngine was built without a memory system")
+        self.ingest_queue.append(session)
+
+    def _drain_ingest(self) -> int:
+        """One ingest-lane turn: everything queued (capped) goes through a
+        single batched write. Returns sessions ingested."""
+        if not self.ingest_queue:
+            return 0
+        batch = self.ingest_queue[: self.max_ingest_batch]
+        del self.ingest_queue[: len(batch)]
+        self.memory.ingest_batch(batch)
+        self.ingest_batches += 1
+        self.ingest_sessions += len(batch)
+        return len(batch)
 
     # ------------------------------------------------------------------
     def _admit(self) -> List[Request]:
@@ -138,11 +172,12 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admit + one decode step for all active.
-        Returns number of finished requests."""
+        """One engine iteration: admit + one decode step for all active,
+        then one ingest-lane drain. Returns number of finished requests."""
         self._admit()
         act = [a for a in self.active if a is not None]
         if not act:
+            self._drain_ingest()
             return 0
         self.occupancy_sum += len(act) / self.max_batch
         self.steps += 1
@@ -166,12 +201,14 @@ class ServeEngine:
                 self.finished.append(a)
                 self.active[i] = None
                 finished += 1
+        self._drain_ingest()
         return finished
 
     # ------------------------------------------------------------------
     def run_until_drained(self, max_steps: int = 10000) -> List[Request]:
         for _ in range(max_steps):
-            if not self.queue and all(a is None for a in self.active):
+            if not self.queue and not self.ingest_queue \
+                    and all(a is None for a in self.active):
                 break
             self.step()
         return self.finished
@@ -183,6 +220,9 @@ class ServeEngine:
             "mean_occupancy": self.occupancy_sum / max(self.steps, 1),
             "prefix_hits": self.prefix_cache.hits,
             "prefix_misses": self.prefix_cache.misses,
+            "ingest_batches": self.ingest_batches,
+            "ingest_sessions": self.ingest_sessions,
+            "mean_ingest_batch": self.ingest_sessions / max(self.ingest_batches, 1),
         }
 
 

@@ -1,0 +1,95 @@
+"""Minimal hypothesis stand-in so property tests always collect.
+
+When the real ``hypothesis`` wheel is absent, tests fall back to this shim:
+a seeded-random example generator with ``given``/``settings``-compatible
+decorators covering the small strategy surface the suite uses
+(``integers``, ``floats``, ``lists``). Examples are deterministic per test
+(seeded from the test name) so failures reproduce.
+"""
+from __future__ import annotations
+
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self._gen = gen
+
+    def example(self, rng):
+        return self._gen(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value, allow_nan=False, allow_infinity=False,
+            width=64):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _lists(elements, min_size=0, max_size=10):
+    def gen(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(gen)
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _sampled_from(options):
+    opts = list(options)
+    return _Strategy(lambda rng: opts[int(rng.integers(0, len(opts)))])
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    lists=_lists,
+    booleans=_booleans,
+    sampled_from=_sampled_from,
+)
+
+
+def given(**strat_kwargs):
+    def deco(fn):
+        def runner(*args, **kwargs):
+            max_examples = getattr(runner, "_pc_max_examples",
+                                   _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for i in range(max_examples):
+                example = {k: s.example(rng) for k, s in strat_kwargs.items()}
+                try:
+                    fn(*args, **example, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__name__}: "
+                        f"{example!r}") from e
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        # hide the strategy-filled params so pytest doesn't see them as
+        # fixtures (hypothesis does the same signature surgery)
+        sig = inspect.signature(fn)
+        runner.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strat_kwargs
+        ])
+        runner._pc_max_examples = _DEFAULT_MAX_EXAMPLES
+        return runner
+    return deco
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._pc_max_examples = max_examples
+        return fn
+    return deco

@@ -7,7 +7,10 @@ import sys
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _propcheck import given, settings, strategies as st
 
 from repro.config import MemForestConfig
 from repro.core.canonical import canonicalize

@@ -1,0 +1,156 @@
+"""Batched multi-session ingestion: state equivalence with the sequential
+write path, cross-session encoder batching, and single-flush semantics."""
+import numpy as np
+import pytest
+
+from repro.config import MemForestConfig
+from repro.core.encoder import HashingEncoder
+from repro.core.memforest import MemForestSystem
+from repro.data.synthetic import make_workload
+
+
+def _fresh():
+    cfg = MemForestConfig()
+    return MemForestSystem(cfg, HashingEncoder(dim=cfg.embed_dim))
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return make_workload(num_entities=6, num_sessions=12, num_queries=30, seed=7)
+
+
+@pytest.fixture(scope="module")
+def pair(workload):
+    seq = _fresh()
+    for s in workload.sessions:
+        seq.ingest_session(s)
+    bat = _fresh()
+    bat.ingest_batch(workload.sessions)
+    return seq, bat
+
+
+def test_equivalent_facts(pair):
+    seq, bat = pair
+    assert [f.key() for f in seq.forest.facts] == [f.key() for f in bat.forest.facts]
+    assert [f.sources for f in seq.forest.facts] == [f.sources for f in bat.forest.facts]
+    assert seq.forest.fact_alive == bat.forest.fact_alive
+
+
+def test_equivalent_tree_state(pair):
+    seq, bat = pair
+    assert seq.forest.scale_stats() == bat.forest.scale_stats()
+    assert set(seq.forest.trees) == set(bat.forest.trees)
+    for k in seq.forest.trees:
+        t1, t2 = seq.forest.trees[k], bat.forest.trees[k]
+        assert t1.children == t2.children, k
+        assert t1.payload == t2.payload, k
+        # derived artifacts: summaries (emb + text) match after flush
+        assert np.allclose(t1.emb[:t1._n], t2.emb[:t2._n], atol=1e-5), k
+        assert t1.text == t2.text, k
+        t2.check_invariants()
+
+
+def test_equivalent_query_answers(pair, workload):
+    seq, bat = pair
+    for q in workload.queries:
+        assert seq.query(q).answer == bat.query(q).answer
+
+
+def test_one_encoder_forward_per_batch(workload):
+    bat = _fresh()
+    calls0 = bat.encoder.stats.calls
+    bat.ingest_batch(workload.sessions)
+    # ONE cross-session forward for the union of chunk + candidate texts,
+    # not one (or two) per session
+    assert bat.encoder.stats.calls - calls0 == 1
+
+    seq = _fresh()
+    calls0 = seq.encoder.stats.calls
+    for s in workload.sessions:
+        seq.ingest_session(s)
+    assert seq.encoder.stats.calls - calls0 >= len(workload.sessions)
+
+
+def test_one_flush_per_batch(workload):
+    bat = _fresh()
+    assert bat.forest.flush_calls == 0
+    bat.ingest_batch(workload.sessions)
+    assert bat.forest.flush_calls == 1
+    assert not bat.forest.dirty_trees
+    bat.ingest_batch(workload.sessions[:3])
+    assert bat.forest.flush_calls == 2
+
+
+def test_batch_of_one_matches_single(workload):
+    a, b = _fresh(), _fresh()
+    s = workload.sessions[0]
+    a.ingest_session(s)
+    b.ingest_batch([s])
+    assert a.forest.scale_stats() == b.forest.scale_stats()
+    assert [f.key() for f in a.forest.facts] == [f.key() for f in b.forest.facts]
+
+
+def test_empty_batch_is_noop():
+    sys_ = _fresh()
+    assert sys_.ingest_batch([]) == []
+    assert sys_.forest.flush_calls == 0
+
+
+def test_read_triggered_refresh_defers_batch_flush(workload):
+    sys_ = MemForestSystem(MemForestConfig(read_triggered_refresh=True))
+    sys_.ingest_batch(workload.sessions)
+    assert sys_.forest.flush_calls == 0
+    assert sys_.forest.dirty_trees
+    sys_.query(workload.queries[0])        # first reader pays the flush
+    assert sys_.forest.flush_calls == 1
+    assert not sys_.forest.dirty_trees
+
+
+def test_incremental_batches_match_sequential(workload):
+    """Batch boundaries are invisible: two ingest_batch calls over a split
+    stream produce the same state as the per-session loop."""
+    half = len(workload.sessions) // 2
+    bat = _fresh()
+    bat.ingest_batch(workload.sessions[:half])
+    bat.ingest_batch(workload.sessions[half:])
+    seq = _fresh()
+    for s in workload.sessions:
+        seq.ingest_session(s)
+    assert seq.forest.scale_stats() == bat.forest.scale_stats()
+    assert [f.key() for f in seq.forest.facts] == [f.key() for f in bat.forest.facts]
+    for q in workload.queries[:10]:
+        assert seq.query(q).answer == bat.query(q).answer
+
+
+def test_serving_engine_ingest_lane(workload):
+    """Write traffic rides the engine loop: queued sessions drain as ONE
+    batched ingest per engine step, capped at max_ingest_batch."""
+    from repro.serving.engine import ServeEngine
+
+    mem = _fresh()
+
+    class _NoModel:
+        class cfg:
+            num_layers = 0
+
+        def prefill(self, p, b, L):
+            raise AssertionError("no decode traffic in this test")
+
+        def decode(self, p, b, c):
+            raise AssertionError("no decode traffic in this test")
+
+    eng = ServeEngine(_NoModel(), params=None, max_batch=2, memory=mem,
+                      max_ingest_batch=8)
+    for s in workload.sessions:
+        eng.submit_session(s)
+    eng.run_until_drained()
+    assert eng.ingest_sessions == len(workload.sessions)
+    # 12 sessions / cap 8 -> 2 engine turns, each ONE batched write
+    assert eng.ingest_batches == 2
+    assert mem.forest.flush_calls == 2
+    assert eng.metrics()["mean_ingest_batch"] == pytest.approx(6.0)
+
+    ref = _fresh()
+    for s in workload.sessions:
+        ref.ingest_session(s)
+    assert ref.forest.scale_stats() == mem.forest.scale_stats()

@@ -1,7 +1,10 @@
 """Property-based tests for MemTree/Forest invariants (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _propcheck import given, settings, strategies as st
 
 from repro.config import MemForestConfig
 from repro.core.forest import Forest
@@ -142,3 +145,23 @@ def test_level_parallel_equals_sequential(rng):
     ta, tb = a.trees["entity:x"], b.trees["entity:x"]
     np.testing.assert_allclose(ta.emb[:ta._n], tb.emb[:tb._n], atol=1e-5)
     assert ra["kernel_calls"] < rb["kernel_calls"]  # batching actually batched
+
+
+def test_summaries_fresh_across_interleaved_flushes(rng):
+    """Splits must dirty-mark the split node's ancestors: with a flush
+    between every insert, every internal summary still equals the
+    recomputation from its (possibly restructured) children."""
+    cfg = MemForestConfig(branching_factor=4, embed_dim=DIM)
+    f = Forest(cfg)
+    for i in range(40):
+        f.insert_item("entity:a", "entity", "fact", i, float(i),
+                      _emb(rng)[0], f"f{i}")
+        f.flush()                      # dirty set cleared every insert
+    t = f.trees["entity:a"]
+    for nid in range(t._n):
+        if not t.alive[nid] or t.level[nid] == 0:
+            continue
+        kids = t.children[nid]
+        mean = np.mean([t.emb[c] for c in kids], axis=0)
+        mean /= np.linalg.norm(mean) + 1e-6
+        np.testing.assert_allclose(t.emb[nid], mean, atol=1e-4)
