@@ -1,15 +1,97 @@
 """Paper Table 3: query-time latency breakdown (retrieval vs answer) for the
-two MemForest operating points and the baselines.
+two MemForest operating points and the baselines — plus the batched read
+path sweep (beyond paper): queries/sec for ``query_batch`` at
+B in {1, 8, 32, 64} against the per-query ``query()`` loop, with an answer
+parity check (the batched path must be result-identical).
 
 CSV: query_<system>,us_per_query,"retrieval_us=..;answer_us=..;acc=.."
+     query_batch_B<k>,us_per_query,"qps=..;speedup_vs_per_query=..;parity=..;acc=.."
+
+``--json PATH`` additionally writes the sweep rows as a JSON document
+(BENCH_query.json in CI) so the perf trajectory is tracked across PRs;
+``--small`` shrinks the workload for smoke runs.
 """
 from __future__ import annotations
 
-from benchmarks.common import accuracy, build_systems, default_workload, emit, fresh_memforest
+import json
+import time
+from typing import List, Optional
+
+from benchmarks.common import build_systems, default_workload, emit, fresh_memforest
+
+SWEEP_BATCHES = (1, 8, 32, 64)
+SWEEP_MODE = "llm+planner"          # the paper's default operating point
+REPEATS = 3
 
 
-def run() -> None:
-    wl = default_workload()
+def _best_of(fn, repeats: int = REPEATS) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _accuracy(answers, queries) -> float:
+    return sum(int(a.strip().lower() == q.gold.strip().lower())
+               for a, q in zip(answers, queries)) / max(len(queries), 1)
+
+
+def _batch_sweep(mf, queries, json_rows: Optional[list]) -> None:
+    """Per-query retrieve() loop vs query_batch at each B — identical
+    answers required (parity), throughput reported as queries/sec."""
+    n = len(queries)
+    # warm every jit shape bucket both paths touch
+    mf.query(queries[0], mode=SWEEP_MODE)
+    for b in SWEEP_BATCHES:
+        mf.query_batch(queries[:b], mode=SWEEP_MODE)
+
+    base_answers = [mf.query(q, mode=SWEEP_MODE).answer for q in queries]
+    base_wall = _best_of(
+        lambda: [mf.query(q, mode=SWEEP_MODE) for q in queries])
+    base_acc = _accuracy(base_answers, queries)
+    emit("query_per_query_loop", base_wall / n * 1e6,
+         f"qps={n / base_wall:.1f};acc={base_acc:.3f}")
+    if json_rows is not None:
+        json_rows.append({"name": "per_query_loop", "qps": n / base_wall,
+                          "us_per_query": base_wall / n * 1e6,
+                          "speedup_vs_per_query": 1.0,
+                          "parity": 1.0, "acc": base_acc})
+
+    for b in SWEEP_BATCHES:
+        def run_batches(b=b):
+            answers: List[str] = []
+            for i in range(0, n, b):
+                answers.extend(
+                    r.answer for r in mf.query_batch(queries[i:i + b],
+                                                     mode=SWEEP_MODE))
+            return answers
+        answers = run_batches()
+        wall = _best_of(run_batches)
+        parity = sum(int(a == bse) for a, bse in zip(answers, base_answers)) / n
+        speedup = base_wall / wall
+        acc = _accuracy(answers, queries)
+        emit(f"query_batch_B{b}", wall / n * 1e6,
+             f"qps={n / wall:.1f};speedup_vs_per_query={speedup:.2f}x;"
+             f"parity={parity:.3f};acc={acc:.3f}")
+        if json_rows is not None:
+            json_rows.append({"name": f"query_batch_B{b}", "qps": n / wall,
+                              "us_per_query": wall / n * 1e6,
+                              "speedup_vs_per_query": speedup,
+                              "parity": parity, "acc": acc})
+
+
+def run(small: bool = False, json_path: Optional[str] = None) -> None:
+    if small:
+        wl = default_workload(num_entities=4, num_sessions=8,
+                              transitions_per_entity=3, num_queries=48)
+        sweep_wl = wl
+    else:
+        wl = default_workload()
+        sweep_wl = default_workload(num_entities=8, num_sessions=14,
+                                    transitions_per_entity=4, num_queries=128,
+                                    seed=2)
 
     def bench(system, label, mode=None):
         # warm
@@ -32,18 +114,23 @@ def run() -> None:
     bench(mf, "memforest_planner", mode="llm+planner")
     bench(mf, "memforest_emb", mode="emb")
 
-    # batched serving path (beyond-paper): one encoder forward + one fused
-    # topk_sim across the whole query batch
-    import time as _t
-    mf.query_batch(wl.queries[:4], mode="emb")  # warm
-    t0 = _t.perf_counter()
-    res = mf.query_batch(wl.queries, mode="emb")
-    dt = _t.perf_counter() - t0
-    correct = sum(int(r.answer.strip().lower() == q.gold.strip().lower())
-                  for r, q in zip(res, wl.queries))
-    emit("query_memforest_emb_batched", dt / len(wl.queries) * 1e6,
-         f"batch={len(wl.queries)};acc={correct/len(wl.queries):.3f}")
+    # batched read path (beyond paper): device-resident normalized indexes +
+    # level-synchronous fused browse, swept over serving batch sizes
+    json_rows: Optional[list] = [] if json_path else None
+    mf_sweep = fresh_memforest()
+    for s in sweep_wl.sessions:
+        mf_sweep.ingest_session(s)
+    _batch_sweep(mf_sweep, sweep_wl.queries, json_rows)
+    if json_path:
+        doc = {"bench": "query_latency", "mode": SWEEP_MODE,
+               "num_queries": len(sweep_wl.queries), "small": small,
+               "rows": json_rows}
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {json_path}", flush=True)
 
+    if small:
+        return
     for name, mk in build_systems().items():
         if name == "memforest":
             continue
@@ -54,4 +141,12 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="smoke-scale workload (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the batch-sweep rows as JSON")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(small=args.small, json_path=args.json)

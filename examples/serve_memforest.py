@@ -48,22 +48,30 @@ print(f"write path: {time.perf_counter()-t0:.2f}s for {len(wl.sessions)} session
       f"({encoder.stats.calls} batched model calls)")
 print("memory:", mf.scale_stats())
 
-correct = 0
-for q in wl.queries:
-    r = mf.query(q)
-    correct += int(r.answer.strip().lower() == q.gold.strip().lower())
-print(f"answer accuracy: {correct}/{len(wl.queries)}")
+# batched read path: one encoder forward + fused index scans + one browse
+# launch per tree level for ALL queries (device-resident normalized indexes)
+t0 = time.perf_counter()
+results = mf.query_batch(wl.queries)
+dt = time.perf_counter() - t0
+correct = sum(int(r.answer.strip().lower() == q.gold.strip().lower())
+              for r, q in zip(results, wl.queries))
+print(f"read path: {dt:.2f}s for {len(wl.queries)} queries (batched) | "
+      f"answer accuracy: {correct}/{len(wl.queries)}")
 
 # --- batched request serving on the same backbone ----------------------------
-print("\nserving engine (continuous batching):")
-eng = ServeEngine(model, params, max_batch=4, max_len=64)
+print("\nserving engine (continuous batching, decode + query lanes):")
+eng = ServeEngine(model, params, max_batch=4, max_len=64, memory=mf)
 rng = np.random.default_rng(0)
 for i in range(8):
     eng.submit(tok.encode(f"summarize interval {i} of the bob residence scope"),
-               max_new_tokens=4)
+               max_new_tokens=4, prefix_key="summarize")
+rids = [eng.submit_query(q) for q in wl.queries]   # retrieval rides the loop
 t0 = time.perf_counter()
 done = eng.run_until_drained()
 dt = time.perf_counter() - t0
 m = eng.metrics()
-print(f"served {len(done)} requests in {dt:.2f}s | "
-      f"occupancy {m['mean_occupancy']:.0%} | {m['decoded_tokens']} tokens")
+print(f"served {len(done)} decode requests + {m['queries_served']:.0f} queries "
+      f"in {dt:.2f}s | occupancy {m['mean_occupancy']:.0%} | "
+      f"{m['decoded_tokens']} tokens | query batches {m['query_batches']:.0f}")
+assert all(eng.pop_query_result(r).answer == res.answer
+           for r, res in zip(rids, results))

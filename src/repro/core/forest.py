@@ -45,10 +45,24 @@ class Forest:
         self.dirty_trees: Set[str] = set()
         # derived: root index
         self._root_matrix = np.zeros((0, config.embed_dim), np.float32)
+        # device-resident L2-normalized index caches (read path): the fact
+        # and root matrices live on device between queries, invalidated
+        # incrementally — appends sync [synced, n), in-place edits land in a
+        # dirty-row set, capacity growth forces a full re-upload. topk_sim
+        # then runs with normalize=False: no per-query host->device transfer
+        # and no O(N*D) re-normalization.
+        self._fact_dev = None
+        self._fact_dev_rows = 0
+        self._fact_dev_dirty: Set[int] = set()
+        self._root_dev = None
+        self._root_dev_rows = 0
+        self._root_dev_dirty: Set[int] = set()
         # counters (benchmarks read these)
         self.summary_refreshes = 0
         self.flush_levels = 0
         self.flush_calls = 0
+        self.index_uploads = 0          # full device re-uploads
+        self.index_row_updates = 0      # incremental scatter updates
 
     # ------------------------------------------------------------------
     # persistent-state writes
@@ -65,6 +79,7 @@ class Forest:
                 self._root_matrix = np.concatenate(
                     [self._root_matrix, np.zeros((grow, self.config.embed_dim), np.float32)]
                 )
+                self._root_dev = None   # capacity changed: full re-upload
         return t
 
     def add_fact(self, fact: CanonicalFact) -> int:
@@ -76,10 +91,17 @@ class Forest:
             self.fact_emb = np.concatenate(
                 [self.fact_emb, np.zeros((grow, self.config.embed_dim), np.float32)]
             )
+            self._fact_dev = None       # capacity changed: full re-upload
         self.fact_emb[fact.fact_id] = fact.emb
         sid = fact.sources[0][0] if fact.sources else ""
         self.session_registry.setdefault(sid, {"facts": [], "cells": []})["facts"].append(fact.fact_id)
         return fact.fact_id
+
+    def kill_fact(self, fact_id: int) -> None:
+        """Mark a fact dead and inert its index row (host + device)."""
+        self.fact_alive[fact_id] = False
+        self.fact_emb[fact_id] = 0.0
+        self._fact_dev_dirty.add(fact_id)
 
     def add_cell(self, cell: DialogueCell) -> int:
         cell.cell_id = len(self.cells)
@@ -142,6 +164,7 @@ class Forest:
         for tid in self.dirty_trees:
             tree = self.trees[tid]
             self._root_matrix[tree.tree_id] = tree.root_emb()
+            self._root_dev_dirty.add(tree.tree_id)
         self.dirty_trees.clear()
 
         self.summary_refreshes += refreshes
@@ -182,6 +205,7 @@ class Forest:
                                              self.config.embed_dim)
         tree.dirty.clear()
         self._root_matrix[tree.tree_id] = tree.root_emb()
+        self._root_dev_dirty.add(tree.tree_id)
         self.dirty_trees.discard(scope_key)
         self.summary_refreshes += calls
         return calls
@@ -197,6 +221,61 @@ class Forest:
         """(capacity-padded matrix, valid count). Dead facts' rows are zeroed
         on deletion; callers filter by fact_alive."""
         return self.fact_emb, len(self.facts)
+
+    def set_root_row(self, tree: TreeArena) -> None:
+        """Write a tree's root-index row (host + device invalidation) — the
+        one sanctioned way to edit ``_root_matrix`` outside flush()."""
+        self._root_matrix[tree.tree_id] = tree.root_emb()
+        self._root_dev_dirty.add(tree.tree_id)
+
+    # ------------------------------------------------------------------
+    # device-resident normalized index views (retrieval hot path)
+    # ------------------------------------------------------------------
+    def _sync_device(self, host: np.ndarray, n: int, cached, synced_rows: int,
+                     dirty: Set[int]):
+        """Bring one device index cache up to date with its host matrix.
+        Returns (device array, new synced row count)."""
+        if cached is None or cached.shape != host.shape:
+            self.index_uploads += 1
+            dirty.clear()
+            return ops.normalize_rows(jnp.asarray(host)), n
+        rows = sorted(set(r for r in dirty if r < n)
+                      | set(range(synced_rows, n)))
+        dirty.clear()
+        if not rows:
+            return cached, n
+        # bucket the update size: the jit-compile set for the scatter stays
+        # O(log U_max); padding entries carry an out-of-bounds index (drop)
+        cap = 1
+        while cap < len(rows):
+            cap *= 2
+        idx = np.full(cap, host.shape[0], np.int32)
+        idx[: len(rows)] = rows
+        upd = np.zeros((cap, host.shape[1]), np.float32)
+        upd[: len(rows)] = host[rows]
+        self.index_row_updates += 1
+        return ops.scatter_normalize_rows(
+            cached, jnp.asarray(idx), jnp.asarray(upd)), n
+
+    def fact_index_device(self):
+        """(device-resident L2-normalized fact matrix, valid count). Use with
+        ``topk_sim(..., normalize=False)``; rows are normalized with the same
+        formula the kernel applies, so scores match the host path bit-for-
+        bit. Dead facts' rows are zero vectors (score 0 after masking)."""
+        n = len(self.facts)
+        self._fact_dev, self._fact_dev_rows = self._sync_device(
+            self.fact_emb, n, self._fact_dev, self._fact_dev_rows,
+            self._fact_dev_dirty)
+        return self._fact_dev, n
+
+    def root_index_device(self):
+        """(device-resident normalized root matrix, valid count, tree order).
+        Same contract as fact_index_device for the tree-root index."""
+        n = len(self._tree_order)
+        self._root_dev, self._root_dev_rows = self._sync_device(
+            self._root_matrix, n, self._root_dev, self._root_dev_rows,
+            self._root_dev_dirty)
+        return self._root_dev, n, list(self._tree_order)
 
     # ------------------------------------------------------------------
     # scene routing state

@@ -36,8 +36,7 @@ def delete_session(forest: Forest, session_id: str) -> Dict[str, int]:
         fact.sources = [s for s in fact.sources if s[0] != session_id]
         if fact.sources:
             continue  # still supported by other sessions
-        forest.fact_alive[fid] = False
-        forest.fact_emb[fid] = 0.0   # dead rows go inert in the index
+        forest.kill_fact(fid)        # dead rows go inert (host + device index)
         facts_removed += 1
         for scope_key, leaf in forest.placement.pop(("fact", fid), []):
             tree = forest.trees[scope_key]
@@ -90,7 +89,7 @@ def _copy_tree_into(dst: Forest, src_tree: TreeArena, scope_key: str,
                 dst.placement.setdefault(("fact", p), []).append((scope_key, nid))
             else:
                 dst.placement.setdefault(("cell", -p - 1), []).append((scope_key, nid))
-    dst._root_matrix[t.tree_id] = t.root_emb()
+    dst.set_root_row(t)
 
 
 def migrate_merge(dst: Forest, src: Forest) -> Dict[str, int]:

@@ -124,8 +124,11 @@ class MemForestSystem:
 
     def query_batch(self, qs: List[Query], mode: Optional[str] = None,
                     final_topk: Optional[int] = None) -> List[QueryResult]:
-        """Batched serving path: one encoder forward + one fused topk_sim
-        across all queries (kernel Q-dimension), then per-query browse."""
+        """Batched serving path: one encoder forward, one fused topk_sim per
+        device-resident index across all queries (kernel Q-dimension), one
+        planner forward, and a level-synchronous browse that scores each
+        depth level of every (query, tree) lane in a single kernel launch.
+        Result-identical to calling query() per element."""
         if self.forest.dirty_trees:
             self.forest.flush()
         results = self.retriever.retrieve_batch(

@@ -20,11 +20,28 @@ from __future__ import annotations
 
 import bisect
 import math
-from typing import Dict, List, Optional, Set, Tuple
+import re
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
 
 import numpy as np
 
 SUMMARY_CHAR_BUDGET = 320
+
+# content-word tokenizer shared by browse intent matching (retrieval) and the
+# per-node word-set caches below — one definition so cached node sets and
+# query sets are always comparable
+_WORD_RE = re.compile(r"[a-z]+")
+STOPWORDS = frozenset(
+    "what where when did does do is was the a an to of in on as now first "
+    "before after moving become becoming switch switched start started who "
+    "which place over since".split()
+)
+
+
+def content_words(text: str) -> FrozenSet[str]:
+    return frozenset(
+        w for w in _WORD_RE.findall(text.lower()) if w not in STOPWORDS
+    )
 
 
 class TreeArena:
@@ -34,7 +51,7 @@ class TreeArena:
         "tree_id", "scope_key", "kind", "k", "dim",
         "parent", "children", "level", "start_ts", "end_ts",
         "payload", "text", "alive", "emb", "dirty", "root", "_n",
-        "_deleted_any",
+        "_deleted_any", "_node_words", "_node_lower",
     )
 
     def __init__(self, tree_id: int, scope_key: str, kind: str, k: int, dim: int):
@@ -61,6 +78,10 @@ class TreeArena:
         self.root: int = -1
         self._n = 0
         self._deleted_any = False
+        # memoized per-node text views (browse intent matching re-reads the
+        # same node texts for every query); invalidated by refresh_text
+        self._node_words: Dict[int, FrozenSet[str]] = {}
+        self._node_lower: Dict[int, str] = {}
 
     # ------------------------------------------------------------------
     # node allocation
@@ -113,6 +134,42 @@ class TreeArena:
 
     def root_emb(self) -> np.ndarray:
         return self.emb[self.root] if self.root >= 0 else np.zeros(self.dim, np.float32)
+
+    # ------------------------------------------------------------------
+    # browse support: memoized text views + packed child gathers
+    # ------------------------------------------------------------------
+    def node_words(self, node: int) -> FrozenSet[str]:
+        """Memoized content-word set of a node's summary/leaf text."""
+        w = self._node_words.get(node)
+        if w is None:
+            w = content_words(self.text[node])
+            self._node_words[node] = w
+        return w
+
+    def node_text_lower(self, node: int) -> str:
+        """Memoized lowercased node text (anchor substring matching)."""
+        t = self._node_lower.get(node)
+        if t is None:
+            t = self.text[node].lower()
+            self._node_lower[node] = t
+        return t
+
+    def pack_children(self, nodes: List[int], k_pad: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Contiguous child-index arrays for the level-synchronous browse:
+        (idx (F, k_pad) int32, mask (F, k_pad) f32, emb (F, k_pad, D) f32).
+        The embedding gather is ONE fancy-index over the arena (padding slots
+        reuse index 0 and are masked), so packing cost scales with the
+        frontier, not with per-child Python calls."""
+        F = len(nodes)
+        idx = np.zeros((F, k_pad), np.int32)
+        mask = np.zeros((F, k_pad), np.float32)
+        for i, n in enumerate(nodes):
+            kids = self.children[n]
+            c = min(len(kids), k_pad)
+            idx[i, :c] = kids[:c]
+            mask[i, :c] = 1.0
+        return idx, mask, self.emb[idx]
 
     # ------------------------------------------------------------------
     # insertion
@@ -284,6 +341,8 @@ class TreeArena:
                 parts.append(t)
         joined = " | ".join(parts)
         self.text[node] = joined[:SUMMARY_CHAR_BUDGET]
+        self._node_words.pop(node, None)
+        self._node_lower.pop(node, None)
 
     def check_invariants(self) -> None:
         """Test hook: temporal leaf order, parent ranges, balance bound."""

@@ -1,8 +1,9 @@
-"""Query path: forest recall + tree browse (paper §4.3).
+"""Query path: forest recall + tree browse (paper §4.3), batched.
 
 Forest recall (Eq. 7): union of root recall (tree-level relevance) and
 fact-to-tree recall (evidence-level relevance mapped back through placement),
-scored with the fused `topk_sim` kernel.
+scored with the fused `topk_sim` kernel against the Forest's DEVICE-RESIDENT
+normalized indexes (no per-query host->device transfer or re-normalization).
 
 Browse modes (paper Table 7 ablation):
   * flat        — top-k facts from the flat index, no tree structure
@@ -17,6 +18,15 @@ Browse modes (paper Table 7 ablation):
                   selection (DESIGN.md §7)
   * llm+planner — llm browse + per-tree subqueries from root summaries
                   (anchor terms weighted, tree time-range aware)
+
+The tree browse is LEVEL-SYNCHRONOUS and batched: every (query, tree) pair is
+a browse *lane*, and each descent round packs all lanes' expandable beam
+nodes into one padded (F, K, D) child-embedding gather scored by a single
+``browse_scores`` kernel launch — the read-path twin of the flush kernel's
+cross-tree batch dimension. Intent/anchor bonuses stay on host as vectorized
+numpy over the packed frontier (with per-node content-word sets memoized on
+the TreeArena). ``retrieve`` and ``retrieve_batch`` share this engine, so
+batched results are identical to the single-query path by construction.
 
 The answerer is SHARED across all memory systems benchmarked (baselines
 included): given retrieved canonical facts it applies query semantics
@@ -34,7 +44,7 @@ import numpy as np
 
 from repro.config import MemForestConfig
 from repro.core.forest import Forest
-from repro.core.memtree import TreeArena
+from repro.core.memtree import TreeArena, content_words as _content_words
 from repro.core.types import CanonicalFact, Query, QueryResult
 from repro.data import templates as T
 from repro.kernels import ops
@@ -43,17 +53,6 @@ _BEFORE_RE = re.compile(r"before (?:moving to |becoming |project )?([A-Za-z ]+?)
 _WHEN_RE = re.compile(r"^When did")
 _FIRST_RE = re.compile(r"first")
 _NOW_RE = re.compile(r"now\?$")
-
-
-_STOPWORDS = frozenset(
-    "what where when did does do is was the a an to of in on as now first "
-    "before after moving become becoming switch switched start started who "
-    "which place over since".split()
-)
-
-
-def _content_words(text: str):
-    return {w for w in re.findall(r"[a-z]+", text.lower()) if w not in _STOPWORDS}
 
 
 class TemporalIntent:
@@ -86,50 +85,38 @@ class TemporalIntent:
         return bool(set(re.findall(r"[a-z]+", text.lower())) & kws)
 
 
+class _Lane:
+    """One (query, tree) pair of the level-synchronous batched browse."""
+
+    __slots__ = ("qi", "tree", "q", "intent", "q_words", "beam", "next_beam",
+                 "collected")
+
+    def __init__(self, qi: int, tree: TreeArena, q: np.ndarray,
+                 intent: Optional[TemporalIntent], q_words):
+        self.qi = qi
+        self.tree = tree
+        self.q = q                    # browse query vector (planner may mix)
+        self.intent = intent          # None for emb browse
+        self.q_words = q_words
+        self.beam: List[Tuple[int, float]] = []
+        self.next_beam: List[Tuple[int, float]] = []
+        self.collected: Dict[int, float] = {}
+
+
 class Retriever:
     def __init__(self, forest: Forest, encoder, config: MemForestConfig):
         self.forest = forest
         self.encoder = encoder
         self.config = config
+        self.browse_launches = 0      # benchmarks read this
 
     # ------------------------------------------------------------------
     def retrieve(self, text: str, mode: Optional[str] = None,
                  final_topk: Optional[int] = None) -> Tuple[List[CanonicalFact], List[str], Dict]:
-        """Returns (facts, evidence_texts, stats)."""
-        cfg = self.config
-        mode = mode or cfg.browse_mode
-        topk = final_topk or cfg.final_topk
-        t0 = time.perf_counter()
-        calls0 = self.encoder.stats.calls
-
-        q_emb = self.encoder.encode([text])[0]
-        intent = TemporalIntent.parse(text)
-
-        if mode == "flat":
-            facts = self._flat_topk(q_emb, topk)
-            return facts, [f.text for f in facts], self._stats(t0, calls0)
-
-        trees = self._forest_recall(q_emb)
-        if mode == "root-only":
-            ev = [t.text[t.root][:200] if t.root >= 0 else "" for t in trees]
-            facts = self._facts_from_summaries(trees, topk)
-            return facts, ev, self._stats(t0, calls0)
-
-        leaves: List[Tuple[TreeArena, int, float]] = []
-        for tree in trees:
-            browse_q = q_emb
-            browse_intent = intent
-            if mode.endswith("+planner"):
-                browse_q, browse_intent = self._plan(tree, text, q_emb, intent, mode)
-            use_intent = mode.startswith("llm")
-            leaves.extend(
-                self._browse(tree, browse_q,
-                             browse_intent if use_intent else None,
-                             text if use_intent else None)
-            )
-
-        facts, ev = self._resolve(leaves, q_emb, intent, topk, use_intent=mode.startswith("llm"))
-        return facts, ev, self._stats(t0, calls0)
+        """Single-query path. Returns (facts, evidence_texts, stats). Shares
+        the lane engine with retrieve_batch (a batch of one), so batching is
+        result-invariant by construction."""
+        return self.retrieve_batch([text], mode=mode, final_topk=final_topk)[0]
 
     def _stats(self, t0, calls0) -> Dict:
         return {
@@ -140,85 +127,131 @@ class Retriever:
     # ------------------------------------------------------------------
     def retrieve_batch(self, texts: List[str], mode: Optional[str] = None,
                        final_topk: Optional[int] = None):
-        """Batched retrieval for serving throughput: ONE encoder forward and
-        ONE fused topk_sim over the fact/root indexes for all queries (the
-        kernel's Q dimension), then per-query browse. Returns a list of
-        (facts, evidence, stats) like retrieve()."""
+        """Batched retrieval for serving throughput: ONE encoder forward, ONE
+        fused topk_sim per index over the device-resident normalized fact and
+        root matrices for all queries (the kernel's Q dimension), ONE planner
+        forward across every (query, tree) lane, and a level-synchronous
+        browse that scores each depth level of every lane in a single
+        ``browse_scores`` launch. Returns a list of (facts, evidence, stats)
+        like retrieve()."""
         cfg = self.config
         mode = mode or cfg.browse_mode
         topk = final_topk or cfg.final_topk
         t0 = time.perf_counter()
         calls0 = self.encoder.stats.calls
+        if not texts:
+            return []
 
         q_embs = self.encoder.encode(texts)              # one batch
-        mat, n_facts = self.forest.fact_index()
-        roots, n_trees, order = self.forest.root_index()
+        fact_dev, n_facts = self.forest.fact_index_device()
+        root_dev, n_trees, order = self.forest.root_index_device()
+        qd = ops.normalize_rows(jnp.asarray(q_embs))
 
         flat_idx = None
         if n_facts:
             _, flat_idx = ops.topk_sim(
-                jnp.asarray(q_embs), jnp.asarray(mat),
-                min(max(topk, cfg.fact_recall_topk), n_facts),
-                num_valid=n_facts, impl=self.forest.kernel_impl,
+                qd, fact_dev, min(max(topk, cfg.fact_recall_topk), n_facts),
+                normalize=False, num_valid=n_facts, impl=self.forest.kernel_impl,
             )
             flat_idx = np.asarray(flat_idx)
-        root_idx = None
+        root_vals = root_idx = None
         if n_trees:
-            _, root_idx = ops.topk_sim(
-                jnp.asarray(q_embs), jnp.asarray(roots),
-                min(cfg.forest_recall_topk * 3, n_trees),
-                num_valid=n_trees, impl=self.forest.kernel_impl,
+            root_vals, root_idx = ops.topk_sim(
+                qd, root_dev, min(cfg.forest_recall_topk * 3, n_trees),
+                normalize=False, num_valid=n_trees, impl=self.forest.kernel_impl,
             )
+            root_vals = np.asarray(root_vals)
             root_idx = np.asarray(root_idx)
 
-        out = []
-        for qi, text in enumerate(texts):
-            q_emb = q_embs[qi]
-            flat = []
+        per_q_flat: List[List[CanonicalFact]] = []
+        for qi in range(len(texts)):
+            flat: List[CanonicalFact] = []
             if flat_idx is not None:
                 for i in flat_idx[qi]:
                     if i >= 0 and self.forest.fact_alive[int(i)]:
                         flat.append(self.forest.facts[int(i)])
-            if mode == "flat":
-                out.append((flat[:topk], [f.text for f in flat[:topk]],
-                            self._stats(t0, calls0)))
-                continue
-            intent = TemporalIntent.parse(text)
-            trees = self._recall_from_precomputed(
-                q_emb, flat, root_idx[qi] if root_idx is not None else None, order)
-            leaves: List[Tuple[TreeArena, int, float]] = []
-            for tree in trees:
-                browse_q, browse_intent = q_emb, intent
-                if mode.endswith("+planner"):
-                    browse_q, browse_intent = self._plan(tree, text, q_emb, intent, mode)
-                use_intent = mode.startswith("llm")
-                leaves.extend(self._browse(
-                    tree, browse_q, browse_intent if use_intent else None,
-                    text if use_intent else None))
-            facts, ev = self._resolve(leaves, q_emb, intent, topk,
-                                      use_intent=mode.startswith("llm"))
-            out.append((facts, ev, self._stats(t0, calls0)))
-        return out
+            per_q_flat.append(flat)
 
-    def _recall_from_precomputed(self, q_emb, flat_facts, root_row, order):
+        if mode == "flat":
+            pairs = [(flat[:topk], [f.text for f in flat[:topk]])
+                     for flat in per_q_flat]
+            stats = self._stats(t0, calls0)
+            return [(f, e, stats) for f, e in pairs]
+
+        intents = [TemporalIntent.parse(t) for t in texts]
+        per_q_trees = [
+            self._recall_from_scores(
+                q_embs[qi], per_q_flat[qi],
+                root_vals[qi] if root_vals is not None else None,
+                root_idx[qi] if root_idx is not None else None, order)
+            for qi in range(len(texts))
+        ]
+
+        if mode == "root-only":
+            pairs = []
+            for trees in per_q_trees:
+                ev = [t.text[t.root][:200] if t.root >= 0 else "" for t in trees]
+                pairs.append((self._facts_from_summaries(trees, topk), ev))
+            stats = self._stats(t0, calls0)
+            return [(f, e, stats) for f, e in pairs]
+
+        use_intent = mode.startswith("llm")
+        lanes: List[_Lane] = []
+        per_q_lanes: List[List[_Lane]] = [[] for _ in texts]
+        for qi, trees in enumerate(per_q_trees):
+            q_words = _content_words(texts[qi]) if use_intent else frozenset()
+            for tree in trees:
+                lane = _Lane(qi, tree, q_embs[qi],
+                             intents[qi] if use_intent else None, q_words)
+                lanes.append(lane)
+                per_q_lanes[qi].append(lane)
+
+        if mode.endswith("+planner") and lanes:
+            self._plan_lanes(lanes, texts, mode)
+
+        self._browse_lanes(lanes)
+
+        pairs = []
+        for qi in range(len(texts)):
+            leaves: List[Tuple[TreeArena, int, float]] = []
+            for lane in per_q_lanes[qi]:
+                best = sorted(lane.collected.items(), key=lambda kv: -kv[1])[:16]
+                leaves.extend((lane.tree, n, s) for n, s in best)
+                if use_intent:
+                    leaves.extend(self._temporal_navigate(
+                        lane.tree, intents[qi], lane.q_words))
+            pairs.append(self._resolve(leaves, q_embs[qi], intents[qi], topk,
+                                       use_intent=use_intent))
+        stats = self._stats(t0, calls0)
+        return [(facts, ev, stats) for facts, ev in pairs]
+
+    # ------------------------------------------------------------------
+    def _recall_from_scores(self, q_emb, flat_facts, root_vals_row,
+                            root_idx_row, order) -> List[TreeArena]:
+        """Forest recall from the precomputed fused topk_sim results: root
+        scores come straight from the kernel's values (no re-dotting), and
+        the tree order is resolved once per batch (hoisted by the caller)."""
         cfg = self.config
         allowed = set(cfg.tree_families)
         scores: Dict[str, float] = {}
-        if root_row is not None:
-            for i in root_row:
+        if root_idx_row is not None:
+            for v, i in zip(root_vals_row, root_idx_row):
                 if i >= 0:
                     key = order[int(i)]
-                    roots_mat, _, _ = self.forest.root_index()
-                    scores[key] = float(roots_mat[self.forest.trees[key].tree_id] @ q_emb)
+                    scores[key] = max(scores.get(key, -1e9), float(v))
         for f in flat_facts[: cfg.fact_recall_topk]:
             sim = float(f.emb @ q_emb)
             for scope_key, _leaf in self.forest.placement.get(("fact", f.fact_id), []):
                 scores[scope_key] = max(scores.get(scope_key, -1e9), 0.95 * sim)
+            # fact -> source-session recall (session trees host cells; the
+            # facts' source refs map them back — keeps the fallback channel
+            # recallable)
             if "session" in allowed:
                 for sid, _ in f.sources[:2]:
                     key = f"session:{sid}"
                     if key in self.forest.trees:
                         scores[key] = max(scores.get(key, -1e9), 0.9 * sim)
+        # family filter BEFORE ranking (tree-family ablation must not starve)
         scores = {k: v for k, v in scores.items()
                   if self.forest.trees[k].kind in allowed}
         ranked = sorted(scores.items(), key=lambda kv: -kv[1])[: cfg.forest_recall_topk]
@@ -226,141 +259,128 @@ class Retriever:
                 if self.forest.trees[k].root >= 0]
 
     # ------------------------------------------------------------------
-    def _flat_topk(self, q_emb: np.ndarray, k: int) -> List[CanonicalFact]:
-        mat, n = self.forest.fact_index()
-        if n == 0:
-            return []
-        vals, idx = ops.topk_sim(
-            jnp.asarray(q_emb[None]), jnp.asarray(mat), min(k, n),
-            num_valid=n, impl=self.forest.kernel_impl,
-        )
-        out = []
-        for i in np.asarray(idx[0]):
-            if i >= 0 and self.forest.fact_alive[int(i)]:
-                out.append(self.forest.facts[int(i)])
-        return out
-
-    def _forest_recall(self, q_emb: np.ndarray) -> List[TreeArena]:
-        cfg = self.config
-        roots, n_trees, order = self.forest.root_index()
-        allowed = set(cfg.tree_families)
-        scores: Dict[str, float] = {}
-        if n_trees:
-            k = min(cfg.forest_recall_topk * 3, n_trees)
-            vals, idx = ops.topk_sim(
-                jnp.asarray(q_emb[None]), jnp.asarray(roots), k,
-                num_valid=n_trees, impl=self.forest.kernel_impl,
-            )
-            for v, i in zip(np.asarray(vals[0]), np.asarray(idx[0])):
-                if i >= 0:
-                    scores[order[int(i)]] = max(scores.get(order[int(i)], -1e9), float(v))
-        # fact -> tree recall
-        for f in self._flat_topk(q_emb, cfg.fact_recall_topk):
-            sim = float(f.emb @ q_emb)
-            for scope_key, _leaf in self.forest.placement.get(("fact", f.fact_id), []):
-                s = 0.95 * sim
-                scores[scope_key] = max(scores.get(scope_key, -1e9), s)
-        # fact -> source-session recall (session trees host cells; the facts'
-        # source refs map them back — keeps the fallback channel recallable)
-        if "session" in allowed:
-            for f in self._flat_topk(q_emb, cfg.fact_recall_topk):
-                for sid, _ in f.sources[:2]:
-                    key = f"session:{sid}"
-                    if key in self.forest.trees:
-                        scores[key] = max(scores.get(key, -1e9),
-                                          0.9 * float(f.emb @ q_emb))
-        # family filter BEFORE ranking (tree-family ablation must not starve)
-        scores = {
-            k: v for k, v in scores.items()
-            if self.forest.trees[k].kind in allowed
-        }
-        ranked = sorted(scores.items(), key=lambda kv: -kv[1])[: cfg.forest_recall_topk]
-        out = []
-        for key, _ in ranked:
-            t = self.forest.trees.get(key)
-            if t is not None and t.root >= 0:
-                out.append(t)
-        return out
-
-    # ------------------------------------------------------------------
-    def _plan(self, tree: TreeArena, text: str, q_emb: np.ndarray,
-              intent: TemporalIntent, mode: str):
-        """Planner: one call per tree creating a targeted subquery. For llm
-        browse it sharpens the intent with the anchor term; for emb browse the
+    def _plan_lanes(self, lanes: List[_Lane], texts: List[str], mode: str) -> None:
+        """Planner: one targeted subquery per (query, tree) lane, encoded in
+        ONE batched forward across every lane of every query. For llm browse
+        it sharpens the intent with the anchor term; for emb browse the
         rewrite is reduced to a vector mix (which is why emb+planner loses
         signal — paper §6.2)."""
-        root_summary = tree.text[tree.root] if tree.root >= 0 else ""
-        sub = f"{text} [tree] {root_summary[:120]}"
-        sub_emb = self.encoder.encode([sub])[0]     # planner cost: 1 call/tree
+        subs = []
+        for lane in lanes:
+            root_summary = lane.tree.text[lane.tree.root] if lane.tree.root >= 0 else ""
+            subs.append(f"{texts[lane.qi]} [tree] {root_summary[:120]}")
+        sub_embs = self.encoder.encode(subs)    # planner cost: 1 batched call
         if mode.startswith("emb"):
-            mix = 0.5 * q_emb + 0.5 * sub_emb
-            mix /= (np.linalg.norm(mix) + 1e-6)
-            return mix, intent
-        return q_emb, intent                        # llm: keep query, sharpen intent
+            for lane, sub_emb in zip(lanes, sub_embs):
+                mix = 0.5 * lane.q + 0.5 * sub_emb
+                mix /= (np.linalg.norm(mix) + 1e-6)
+                lane.q = mix
+        # llm: keep query vectors, the sharpened intent rides on the lane
 
     # ------------------------------------------------------------------
-    def _browse(self, tree: TreeArena, q_emb: np.ndarray,
-                intent: Optional[TemporalIntent],
-                q_text: Optional[str] = None) -> List[Tuple[TreeArena, int, float]]:
-        """Coarse-to-fine descent. Returns (tree, leaf, score) candidates."""
-        if tree.root < 0:
-            return []
-        q_words = _content_words(q_text) if q_text else set()
-        beam = [(tree.root, 1.0)]
+    def _browse_lanes(self, lanes: List[_Lane]) -> None:
+        """Level-synchronous coarse-to-fine descent over every lane at once.
+        Per round, all lanes' expandable beam nodes form ONE packed frontier
+        scored by a single ``browse_scores`` launch; leaf hits collect into
+        each lane's candidate set. Fills ``lane.collected``."""
         budget = self.config.browse_beam
-        collected: Dict[int, float] = {}
-        while beam:
-            next_beam: List[Tuple[int, float]] = []
-            for node, _ in beam:
-                if tree.level[node] == 0:
-                    s = float(tree.emb[node] @ q_emb)
-                    if intent is not None:
-                        s += self._leaf_bonus(tree, node, intent, q_words)
-                    collected[node] = max(collected.get(node, -1e9), s)
-                    continue
-                kids = tree.children[node]
-                sims = np.asarray([float(tree.emb[c] @ q_emb) for c in kids])
-                if intent is not None:
-                    sims = sims + self._intent_bonus(tree, kids, intent, q_words)
+        for lane in lanes:
+            if lane.tree.root >= 0:
+                lane.beam = [(lane.tree.root, 1.0)]
+        active = [lane for lane in lanes if lane.beam]
+        while active:
+            frontier: List[Tuple[_Lane, int]] = []
+            for lane in active:
+                for node, _s in lane.beam:
+                    if lane.tree.level[node] == 0:
+                        s = float(lane.tree.emb[node] @ lane.q)
+                        if lane.intent is not None:
+                            s += self._leaf_bonus(lane.tree, node, lane.intent,
+                                                  lane.q_words)
+                        lane.collected[node] = max(
+                            lane.collected.get(node, -1e9), s)
+                    else:
+                        frontier.append((lane, node))
+            if not frontier:
+                break
+            sims_rows = self._score_frontier(frontier)
+            for (lane, node), sims in zip(frontier, sims_rows):
+                kids = lane.tree.children[node]
+                if lane.intent is not None:
+                    sims = sims + self._intent_bonus(lane.tree, kids,
+                                                     lane.intent, lane.q_words)
                 top = np.argsort(-sims)[:budget]
-                next_beam.extend((kids[i], float(sims[i])) for i in top)
-            agg: Dict[int, float] = {}
-            for n, s in next_beam:
-                agg[n] = max(agg.get(n, -1e9), s)
-            beam = sorted(agg.items(), key=lambda kv: -kv[1])[: max(budget * 2, 6)]
-        leaves = sorted(collected.items(), key=lambda kv: -kv[1])[:16]
-        out = [(tree, n, s) for n, s in leaves]
-        if intent is not None:
-            out.extend(self._temporal_navigate(tree, intent, q_words))
-        return out
+                lane.next_beam.extend((kids[i], float(sims[i])) for i in top)
+            for lane in active:
+                agg: Dict[int, float] = {}
+                for n, s in lane.next_beam:
+                    agg[n] = max(agg.get(n, -1e9), s)
+                lane.beam = sorted(agg.items(), key=lambda kv: -kv[1])[: max(budget * 2, 6)]
+                lane.next_beam = []
+            active = [lane for lane in active if lane.beam]
+
+    def _score_frontier(self, frontier: List[Tuple[_Lane, int]]) -> List[np.ndarray]:
+        """Pack the frontier's child embeddings into one padded (F, K, D)
+        tensor (one fancy-index gather per distinct tree) and score every
+        (entry, child) pair in a single kernel launch. Shapes are bucketed to
+        powers of two so the jit-compile set stays bounded."""
+        F = len(frontier)
+        kmax = max(len(lane.tree.children[n]) for lane, n in frontier)
+        k_pad = 4
+        while k_pad < kmax:
+            k_pad *= 2
+        cap = 8
+        while cap < F:
+            cap *= 2
+        dim = self.config.embed_dim
+        child = np.zeros((cap, k_pad, dim), np.float32)
+        mask = np.zeros((cap, k_pad), np.float32)
+        qm = np.zeros((cap, dim), np.float32)
+        by_tree: Dict[int, Tuple[TreeArena, List[int], List[int]]] = {}
+        for i, (lane, n) in enumerate(frontier):
+            qm[i] = lane.q
+            rows_nodes = by_tree.setdefault(
+                id(lane.tree), (lane.tree, [], []))
+            rows_nodes[1].append(i)
+            rows_nodes[2].append(n)
+        for tree, rows, nodes in by_tree.values():
+            _idx, m, emb = tree.pack_children(nodes, k_pad)
+            child[rows] = emb
+            mask[rows] = m
+        self.browse_launches += 1
+        sims = np.asarray(ops.browse_scores(
+            jnp.asarray(child), jnp.asarray(qm), jnp.asarray(mask),
+            impl=self.forest.kernel_impl,
+        ))
+        return [sims[i, : len(lane.tree.children[n])]
+                for i, (lane, n) in enumerate(frontier)]
 
     def _intent_bonus(self, tree: TreeArena, kids: Sequence[int],
                       intent: TemporalIntent, q_words) -> np.ndarray:
         """The 'LLM reads child summaries' advantage: anchor-term + content-
         word matching and temporal-relation preferences that a bare vector
-        score cannot carry."""
+        score cannot carry. Node text views are memoized on the arena."""
         bonus = np.zeros(len(kids), np.float32)
+        anchor = intent.anchor.lower() if intent.anchor else None
         for i, c in enumerate(kids):
-            txt = tree.text[c].lower()
-            if intent.anchor and intent.anchor.lower() in txt:
+            if anchor and anchor in tree.node_text_lower(c):
                 bonus[i] += 0.30
             if q_words:
-                overlap = len(q_words & _content_words(txt))
+                overlap = len(q_words & tree.node_words(c))
                 bonus[i] += min(0.05 * overlap, 0.20)
-            if intent.relation == "first" and i == 0:
-                bonus[i] += 0.15      # earliest interval
-            if intent.relation == "current" and i == len(kids) - 1:
-                bonus[i] += 0.15      # latest interval
+        if intent.relation == "first":
+            bonus[0] += 0.15          # earliest interval
+        elif intent.relation == "current":
+            bonus[-1] += 0.15         # latest interval
         return bonus
 
     def _leaf_bonus(self, tree: TreeArena, leaf: int,
                     intent: TemporalIntent, q_words) -> float:
-        txt = tree.text[leaf].lower()
         b = 0.0
-        if intent.anchor and intent.anchor.lower() in txt:
+        if intent.anchor and intent.anchor.lower() in tree.node_text_lower(leaf):
             b += 0.30
         if q_words:
-            b += min(0.05 * len(q_words & _content_words(txt)), 0.20)
+            b += min(0.05 * len(q_words & tree.node_words(leaf)), 0.20)
         return b
 
     def _temporal_navigate(self, tree: TreeArena, intent: TemporalIntent,
@@ -373,8 +393,9 @@ class Retriever:
         leaves = tree.leaves_in_order()
         out: List[Tuple[TreeArena, int, float]] = []
         if intent.relation in ("before", "when") and intent.anchor:
+            anchor = intent.anchor.lower()
             for j, leaf in enumerate(leaves):
-                if intent.anchor.lower() in tree.text[leaf].lower():
+                if anchor in tree.node_text_lower(leaf):
                     out.append((tree, leaf, 1.0))
                     if j > 0:
                         out.append((tree, leaves[j - 1], 0.99))
@@ -382,14 +403,14 @@ class Retriever:
         elif intent.relation == "current":
             for leaf in reversed(leaves):
                 if intent.matches_attr(tree.text[leaf]) or (
-                    q_words and len(q_words & _content_words(tree.text[leaf])) >= 2
+                    q_words and len(q_words & tree.node_words(leaf)) >= 2
                 ):
                     out.append((tree, leaf, 1.0))
                     break
         elif intent.relation == "first":
             for leaf in leaves:
                 if intent.matches_attr(tree.text[leaf]) or (
-                    q_words and len(q_words & _content_words(tree.text[leaf])) >= 2
+                    q_words and len(q_words & tree.node_words(leaf)) >= 2
                 ):
                     out.append((tree, leaf, 1.0))
                     break

@@ -12,8 +12,10 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.browse_scores import browse_scores as _browse
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.topk_sim import topk_sim as _topk
@@ -67,6 +69,43 @@ def topk_sim(queries, keys, k, *, normalize=True, num_valid=None, impl="referenc
         num_valid=num_valid,
         interpret=(impl == "pallas_interpret"),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def browse_scores(child_emb, q_emb, child_mask, *, impl="reference"):
+    """One browse depth level: per-frontier-entry masked child scoring.
+    child_emb (F, K, D), q_emb (F, D), child_mask (F, K) -> (F, K) f32."""
+    _check(impl)
+    if impl == "reference":
+        return _ref.browse_scores_ref(child_emb, q_emb, child_mask)
+    return _browse(
+        child_emb, q_emb, child_mask, interpret=(impl == "pallas_interpret")
+    )
+
+
+# ---------------------------------------------------------------------------
+# device-resident index maintenance (used by Forest's normalized index cache)
+# ---------------------------------------------------------------------------
+@jax.jit
+def normalize_rows(x):
+    """L2-normalize rows with the same formula topk_sim uses in-kernel, so a
+    pre-normalized device index + ``normalize=False`` is numerically
+    equivalent to passing the raw matrix with ``normalize=True``."""
+    xf = x.astype(jnp.float32)
+    return xf / (jnp.linalg.norm(xf, axis=-1, keepdims=True) + 1e-6)
+
+
+@jax.jit
+def scatter_normalize_rows(arr, idx, rows):
+    """Incremental device-index update: write normalized ``rows`` at ``idx``
+    in the cached matrix. Padding entries carry idx == arr.shape[0] (out of
+    bounds) and are dropped, so callers can bucket the update size. ``arr``
+    is deliberately NOT donated: previously returned index views must stay
+    valid after a later sync (donation would delete their buffer on
+    accelerator backends)."""
+    rf = rows.astype(jnp.float32)
+    rf = rf / (jnp.linalg.norm(rf, axis=-1, keepdims=True) + 1e-6)
+    return arr.at[idx].set(rf, mode="drop")
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

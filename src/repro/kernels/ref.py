@@ -106,6 +106,20 @@ def topk_sim_ref(
 
 
 # --------------------------------------------------------------------------
+# level-synchronous browse scoring: per-frontier-entry masked matvec
+# --------------------------------------------------------------------------
+def browse_scores_ref(
+    child_emb: jax.Array,   # (F, K, D) — packed frontier children
+    q_emb: jax.Array,       # (F, D) — per-entry query vector
+    child_mask: jax.Array,  # (F, K) — 1.0 for real child slots
+):
+    s = jnp.einsum(
+        "fkd,fd->fk", child_emb.astype(jnp.float32), q_emb.astype(jnp.float32)
+    )
+    return s * child_mask.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
 # tree refresh: masked segment-mean of child embeddings -> parent embedding
 # --------------------------------------------------------------------------
 def tree_refresh_ref(

@@ -15,6 +15,13 @@ write requests queue alongside decode traffic and drain between decode steps
 as ONE ``ingest_batch`` call per engine iteration — write traffic rides the
 same continuous-batching loop, so concurrent tenants' sessions share encoder
 forwards and tree_refresh launches (core/ingest.py).
+
+Query lane: the read-path mirror of the ingest lane. Retrieval requests
+queued via ``submit_query`` drain between decode steps as ONE
+``query_batch`` call per engine iteration, so concurrent tenants' queries
+share the encoder forward, the fused topk_sim index scans, and the
+level-synchronous browse launches (core/retrieval.py). Decode, ingest, and
+query traffic all ride the same continuous-batching loop.
 """
 from __future__ import annotations
 
@@ -42,32 +49,46 @@ class Request:
 
 
 class PrefixCache:
-    """KV cache for shared prompt prefixes, keyed by (key, batch_slots)."""
+    """Prefill reuse cache for shared prompt prefixes.
 
-    def __init__(self, max_entries: int = 8):
-        self.entries: Dict[Tuple[str, int], Tuple[int, dict]] = {}
+    Granularity: one entry per (prefix_key, padded admission signature) —
+    the prefill of a whole right-aligned token block. Prefill is a pure
+    function of the padded token matrix, so when an admission with the same
+    prefix_key reproduces the same block (the common serving pattern:
+    repeated instruction-prefix prompts landing in freed slots), the cached
+    (logits, KV) are reused and the prefill launch is skipped entirely.
+    Finer prefix-segment reuse (prefix KV + suffix-only prefill) needs a
+    position-offset prefill in the model API — ROADMAP open item.
+
+    Each entry pins a full-width prefill (logits + KV tree) on device, so
+    ``max_entries`` bounds the pinned footprint at max_entries x one engine
+    cache; eviction is FIFO."""
+
+    def __init__(self, max_entries: int = 4):
+        self.entries: Dict[Tuple, Tuple] = {}
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
 
-    def get(self, key: str, batch: int):
-        e = self.entries.get((key, batch))
+    def get(self, key: str, sig: Tuple):
+        e = self.entries.get((key, sig))
         if e is not None:
             self.hits += 1
             return e
         self.misses += 1
         return None
 
-    def put(self, key: str, batch: int, prefix_len: int, cache: dict) -> None:
+    def put(self, key: str, sig: Tuple, logits, cache) -> None:
         if len(self.entries) >= self.max_entries:
             self.entries.pop(next(iter(self.entries)))
-        self.entries[(key, batch)] = (prefix_len, cache)
+        self.entries[(key, sig)] = (logits, cache)
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int = 2,
-                 memory=None, max_ingest_batch: int = 16):
+                 memory=None, max_ingest_batch: int = 16,
+                 max_query_batch: int = 32):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -91,6 +112,17 @@ class ServeEngine:
         self.ingest_queue: List = []
         self.ingest_batches = 0
         self.ingest_sessions = 0
+        # query-request lane: read traffic mirrors the ingest lane —
+        # everything queued between two engine steps drains as ONE
+        # MemForestSystem.query_batch call (cross-tenant read batching)
+        self.max_query_batch = max_query_batch
+        self.query_queue: List = []
+        self.query_results: Dict[int, object] = {}
+        self.query_batches = 0
+        self.queries_served = 0
+        # prefill-reuse accounting (PrefixCache)
+        self.prefills = 0
+        self.prefills_reused = 0
 
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len)
@@ -124,6 +156,44 @@ class ServeEngine:
         self.ingest_sessions += len(batch)
         return len(batch)
 
+    def submit_query(self, query, *, mode: Optional[str] = None,
+                     final_topk: Optional[int] = None) -> int:
+        """Queue a retrieval request for the query lane (requires a memory
+        system). The result lands in ``query_results[req_id]`` after the
+        engine step that drains it."""
+        if self.memory is None:
+            raise RuntimeError("ServeEngine was built without a memory system")
+        rid = self._next_id
+        self._next_id += 1
+        self.query_queue.append((rid, query, mode, final_topk))
+        return rid
+
+    def pop_query_result(self, req_id: int):
+        """Consume a finished query's result (None if not served yet).
+        Long-lived deployments must consume results — ``query_results``
+        holds everything unconsumed, like ``finished`` does for decodes."""
+        return self.query_results.pop(req_id, None)
+
+    def _drain_queries(self) -> int:
+        """One query-lane turn: everything queued (capped) goes through
+        batched retrieval — one ``query_batch`` per distinct (mode, topk)
+        group, usually exactly one. Returns queries answered."""
+        if not self.query_queue:
+            return 0
+        batch = self.query_queue[: self.max_query_batch]
+        del self.query_queue[: len(batch)]
+        groups: Dict[Tuple, List] = {}
+        for rid, q, mode, topk in batch:
+            groups.setdefault((mode, topk), []).append((rid, q))
+        for (mode, topk), items in groups.items():
+            res = self.memory.query_batch(
+                [q for _, q in items], mode=mode, final_topk=topk)
+            for (rid, _q), r in zip(items, res):
+                self.query_results[rid] = r
+            self.query_batches += 1
+        self.queries_served += len(batch)
+        return len(batch)
+
     # ------------------------------------------------------------------
     def _admit(self) -> List[Request]:
         """Fill free slots from the queue. New slots are prefilled as a
@@ -151,7 +221,23 @@ class ServeEngine:
         for i in admitted_slots:
             p = prompts[i]
             toks[i, L - len(p):] = p          # right-align
-        logits, new_cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        # prefill reuse: when every admitted request carries the same
+        # prefix_key and this admission reproduces a cached padded token
+        # block, the prefill launch is skipped (prefill is a pure function
+        # of the block). jax arrays are immutable and the cache merge below
+        # is functional, so reuse is aliasing-safe.
+        pkeys = {self.active[i].prefix_key for i in admitted_slots}
+        pkey = pkeys.pop() if len(pkeys) == 1 else None
+        sig = (tuple(admitted_slots), toks.tobytes()) if pkey is not None else None
+        hit = self.prefix_cache.get(pkey, sig) if pkey is not None else None
+        self.prefills += 1
+        if hit is not None:
+            logits, new_cache = hit
+            self.prefills_reused += 1
+        else:
+            logits, new_cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+            if pkey is not None:
+                self.prefix_cache.put(pkey, sig, logits, new_cache)
 
         if self.cache is None:
             self.cache = new_cache
@@ -173,11 +259,13 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One engine iteration: admit + one decode step for all active,
-        then one ingest-lane drain. Returns number of finished requests."""
+        then one ingest-lane and one query-lane drain. Returns number of
+        finished decode requests."""
         self._admit()
         act = [a for a in self.active if a is not None]
         if not act:
             self._drain_ingest()
+            self._drain_queries()
             return 0
         self.occupancy_sum += len(act) / self.max_batch
         self.steps += 1
@@ -202,12 +290,14 @@ class ServeEngine:
                 self.active[i] = None
                 finished += 1
         self._drain_ingest()
+        self._drain_queries()
         return finished
 
     # ------------------------------------------------------------------
     def run_until_drained(self, max_steps: int = 10000) -> List[Request]:
         for _ in range(max_steps):
             if not self.queue and not self.ingest_queue \
+                    and not self.query_queue \
                     and all(a is None for a in self.active):
                 break
             self.step()
@@ -220,9 +310,14 @@ class ServeEngine:
             "mean_occupancy": self.occupancy_sum / max(self.steps, 1),
             "prefix_hits": self.prefix_cache.hits,
             "prefix_misses": self.prefix_cache.misses,
+            "prefills": self.prefills,
+            "prefills_reused": self.prefills_reused,
             "ingest_batches": self.ingest_batches,
             "ingest_sessions": self.ingest_sessions,
             "mean_ingest_batch": self.ingest_sessions / max(self.ingest_batches, 1),
+            "query_batches": self.query_batches,
+            "queries_served": self.queries_served,
+            "mean_query_batch": self.queries_served / max(self.query_batches, 1),
         }
 
 

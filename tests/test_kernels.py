@@ -111,6 +111,50 @@ def test_tree_refresh(rng, P, K, D):
 
 
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("F,K,D", [(1, 4, 64), (7, 8, 256), (64, 8, 128),
+                                   (130, 16, 32)])
+def test_browse_scores(rng, F, K, D):
+    emb = _mk(rng, (F, K, D))
+    q = _mk(rng, (F, D))
+    mask = jnp.asarray((rng.random((F, K)) > 0.3).astype(np.float32))
+    o1 = ops.browse_scores(emb, q, mask, impl="reference")
+    o2 = ops.browse_scores(emb, q, mask, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+    # oracle: per-row masked matvec
+    want = np.einsum("fkd,fd->fk", np.asarray(emb), np.asarray(q)) * np.asarray(mask)
+    np.testing.assert_allclose(np.asarray(o1), want, atol=2e-5)
+
+
+def test_normalize_rows_matches_kernel_formula(rng):
+    x = _mk(rng, (33, 64), scale=3.0)
+    out = np.asarray(ops.normalize_rows(x))
+    want = np.asarray(x, np.float32)
+    want = want / (np.linalg.norm(want, axis=-1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(out, want, atol=1e-6)
+    # pre-normalized keys + normalize=False == raw keys + normalize=True
+    keys = _mk(rng, (50, 64))
+    q = _mk(rng, (4, 64))
+    v1, i1 = ops.topk_sim(q, keys, 5, impl="reference")
+    v2, i2 = ops.topk_sim(ops.normalize_rows(q), ops.normalize_rows(keys), 5,
+                          normalize=False, impl="reference")
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_scatter_normalize_rows(rng):
+    base = np.asarray(rng.normal(size=(16, 32)), np.float32)
+    arr = ops.normalize_rows(jnp.asarray(base))
+    rows = np.asarray(rng.normal(size=(4, 32)), np.float32)
+    idx = np.asarray([3, 7, 16, 16], np.int32)   # two padding slots (dropped)
+    out = np.asarray(ops.scatter_normalize_rows(
+        arr, jnp.asarray(idx), jnp.asarray(rows)))
+    want = base / (np.linalg.norm(base, axis=-1, keepdims=True) + 1e-6)
+    want[3] = rows[0] / (np.linalg.norm(rows[0]) + 1e-6)
+    want[7] = rows[1] / (np.linalg.norm(rows[1]) + 1e-6)
+    np.testing.assert_allclose(out, want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 @pytest.mark.parametrize("B,T,H,K,V,chunk", [
     (1, 64, 2, 8, 8, 16), (2, 128, 2, 16, 16, 32), (1, 96, 3, 8, 16, 32),
 ])

@@ -1,0 +1,177 @@
+"""Batched read path parity: the level-synchronous batched browse must
+return IDENTICAL facts and evidence to the single-query path for every
+browse mode, and the device-resident index caches must stay coherent across
+flush/ingest/delete (invalidation correctness)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:           # in-repo fallback (tests/_propcheck.py)
+    from _propcheck import given, settings, strategies as st
+
+from repro.config import MemForestConfig
+from repro.core.memforest import MemForestSystem
+from repro.data.synthetic import make_workload
+
+MODES = ["flat", "root-only", "emb", "emb+planner", "llm", "llm+planner"]
+
+
+def _fact_sig(facts):
+    return [(f.fact_id, f.text, f.value) for f in facts]
+
+
+@pytest.fixture(scope="module")
+def built():
+    wl = make_workload(num_entities=6, num_sessions=10,
+                       transitions_per_entity=4, num_queries=30, seed=7)
+    mf = MemForestSystem(MemForestConfig())
+    for s in wl.sessions:
+        mf.ingest_session(s)
+    return mf, wl
+
+
+# ---------------------------------------------------------------------------
+# per-mode parity: batched == scalar, exactly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", MODES)
+def test_batched_browse_identical_to_scalar(built, mode):
+    mf, wl = built
+    texts = [q.text for q in wl.queries]
+    singles = [mf.retriever.retrieve(t, mode=mode) for t in texts]
+    batched = mf.retriever.retrieve_batch(texts, mode=mode)
+    for (f1, e1, _), (f2, e2, _) in zip(singles, batched):
+        assert _fact_sig(f1) == _fact_sig(f2)
+        assert e1 == e2
+
+
+def test_query_batch_identical_answers(built):
+    mf, wl = built
+    singles = [mf.query(q).answer for q in wl.queries]
+    batched = [r.answer for r in mf.query_batch(wl.queries)]
+    assert singles == batched
+
+
+def test_batch_size_invariance(built):
+    """Packing must not leak state across lanes: any chunking of the same
+    query stream yields the same results."""
+    mf, wl = built
+    texts = [q.text for q in wl.queries]
+    whole = mf.retriever.retrieve_batch(texts, mode="llm+planner")
+    chunked = []
+    for i in range(0, len(texts), 7):
+        chunked.extend(mf.retriever.retrieve_batch(texts[i:i + 7],
+                                                   mode="llm+planner"))
+    for (f1, e1, _), (f2, e2, _) in zip(whole, chunked):
+        assert _fact_sig(f1) == _fact_sig(f2)
+        assert e1 == e2
+
+
+def test_batched_browse_launch_count(built):
+    """The point of level-synchronous packing: browse kernel launches scale
+    with tree depth, not with batch size."""
+    mf, wl = built
+    texts = [q.text for q in wl.queries]
+    r = mf.retriever
+    c0 = r.browse_launches
+    r.retrieve_batch(texts, mode="llm")
+    batched_launches = r.browse_launches - c0
+    c0 = r.browse_launches
+    for t in texts:
+        r.retrieve(t, mode="llm")
+    scalar_launches = r.browse_launches - c0
+    assert batched_launches * 4 <= scalar_launches, (
+        batched_launches, scalar_launches)
+
+
+# ---------------------------------------------------------------------------
+# property check: parity over random forests
+# ---------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_parity_propcheck(seed):
+    rng = np.random.default_rng(seed)
+    wl = make_workload(num_entities=int(rng.integers(2, 6)),
+                       num_sessions=int(rng.integers(2, 8)),
+                       transitions_per_entity=int(rng.integers(2, 5)),
+                       num_queries=8, seed=seed % 9973)
+    mf = MemForestSystem(MemForestConfig(
+        branching_factor=int(rng.integers(3, 10))))
+    for s in wl.sessions:
+        mf.ingest_session(s)
+    texts = [q.text for q in wl.queries]
+    mode = ["emb", "llm", "llm+planner"][seed % 3]
+    singles = [mf.retriever.retrieve(t, mode=mode) for t in texts]
+    batched = mf.retriever.retrieve_batch(texts, mode=mode)
+    for (f1, e1, _), (f2, e2, _) in zip(singles, batched):
+        assert _fact_sig(f1) == _fact_sig(f2)
+        assert e1 == e2
+
+
+# ---------------------------------------------------------------------------
+# device-index invalidation correctness
+# ---------------------------------------------------------------------------
+def _all_results(mf, queries, mode="llm+planner"):
+    return [(_fact_sig(r[0]), r[1])
+            for r in mf.retriever.retrieve_batch([q.text for q in queries],
+                                                 mode=mode)]
+
+
+def test_results_unchanged_across_flush():
+    """A flush with no intervening writes must not change query results
+    (re-uploading/incrementally updating the device cache is a no-op)."""
+    wl = make_workload(num_entities=4, num_sessions=8,
+                       transitions_per_entity=3, num_queries=12, seed=11)
+    mf = MemForestSystem(MemForestConfig())
+    for s in wl.sessions:
+        mf.ingest_session(s)
+    before = _all_results(mf, wl.queries)
+    mf.forest.flush()
+    after = _all_results(mf, wl.queries)
+    assert before == after
+
+
+def test_index_cache_invalidation_on_ingest():
+    """Incremental ingestion + cached device indexes must equal a fresh
+    system that ingested everything (no stale rows, no missed appends)."""
+    wl = make_workload(num_entities=5, num_sessions=10,
+                       transitions_per_entity=3, num_queries=15, seed=13)
+    half = len(wl.sessions) // 2
+
+    inc = MemForestSystem(MemForestConfig())
+    for s in wl.sessions[:half]:
+        inc.ingest_session(s)
+    _all_results(inc, wl.queries)      # populate the device caches
+    assert inc.forest.index_uploads > 0
+    for s in wl.sessions[half:]:
+        inc.ingest_session(s)
+
+    fresh = MemForestSystem(MemForestConfig())
+    for s in wl.sessions:
+        fresh.ingest_session(s)
+
+    assert _all_results(inc, wl.queries) == _all_results(fresh, wl.queries)
+
+
+def test_index_cache_invalidation_on_delete():
+    """delete_session edits fact rows in place — the device cache must drop
+    the dead rows (kill_fact scatter invalidation)."""
+    wl = make_workload(num_entities=4, num_sessions=8,
+                       transitions_per_entity=3, num_queries=12, seed=17)
+    mf = MemForestSystem(MemForestConfig())
+    for s in wl.sessions:
+        mf.ingest_session(s)
+    _all_results(mf, wl.queries)       # populate the device caches
+    sid = wl.sessions[0].session_id
+    mf.delete_session(sid)
+    after = _all_results(mf, wl.queries)
+    # no retrieved fact may reference the deleted-and-unsupported rows
+    for sig, _ev in after:
+        for fid, _text, _val in sig:
+            if fid >= 0:
+                assert mf.forest.fact_alive[fid]
+    # and the results must match a scalar re-query (cache == host truth)
+    singles = [(_fact_sig(f), e) for f, e, _ in
+               (mf.retriever.retrieve(q.text, mode="llm+planner")
+                for q in wl.queries)]
+    assert after == singles
