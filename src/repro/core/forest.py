@@ -39,6 +39,10 @@ class Forest:
         # placement: ("fact"|"cell", item_id) -> [(scope_key, node_id)]
         self.placement: Dict[Tuple[str, int], List[Tuple[str, int]]] = {}
         self.session_registry: Dict[str, Dict[str, List[int]]] = {}
+        # exactly-once bookkeeping: idempotency keys of applied lifecycle
+        # ops (journaled ingest/delete/merge). Persisted in snapshots, so a
+        # snapshot + journal-tail replay never double-applies an op.
+        self.applied_ops: Set[str] = set()
         # scene clustering state
         self.scene_centroids = np.zeros((0, config.embed_dim), np.float32)
         self.scene_counts: List[int] = []
@@ -120,17 +124,26 @@ class Forest:
     # ------------------------------------------------------------------
     # lazy refresh (Algorithm 1) — level-parallel, batched across trees
     # ------------------------------------------------------------------
-    def flush(self, *, level_parallel: Optional[bool] = None) -> Dict[str, int]:
+    def flush(self, *, level_parallel: Optional[bool] = None,
+              only: Optional[Set[str]] = None) -> Dict[str, int]:
         """Refresh all dirty derived artifacts. Returns counters for this
         flush: {"refreshes": distinct dirty nodes, "levels": dependent depth,
-        "kernel_calls": batched refresh invocations}."""
+        "kernel_calls": batched refresh invocations}.
+
+        ``only`` restricts the flush to a subset of the dirty trees — the
+        maintenance plane uses this to drain refresh work in bounded chunks
+        between serve steps. Because dirty paths never cross trees, flushing
+        the dirty set in any chunking yields the same final derived state as
+        one full flush."""
         if level_parallel is None:
             level_parallel = self.config.level_parallel
         self.flush_calls += 1
         K = self.config.branching_factor
         dim = self.config.embed_dim
 
-        per_tree = {tid: self.trees[tid].dirty_by_level() for tid in self.dirty_trees}
+        targets = set(self.dirty_trees) if only is None else \
+            self.dirty_trees & set(only)
+        per_tree = {tid: self.trees[tid].dirty_by_level() for tid in targets}
         max_level = 0
         refreshes = 0
         kernel_calls = 0
@@ -161,11 +174,11 @@ class Forest:
             tree.dirty.clear()
 
         # root-index rows for dirty trees (derived artifact)
-        for tid in self.dirty_trees:
+        for tid in targets:
             tree = self.trees[tid]
             self._root_matrix[tree.tree_id] = tree.root_emb()
             self._root_dev_dirty.add(tree.tree_id)
-        self.dirty_trees.clear()
+        self.dirty_trees -= targets
 
         self.summary_refreshes += refreshes
         self.flush_levels += max_level

@@ -1,0 +1,331 @@
+"""Write-ahead journal + durable exactly-once write path (ROADMAP: "async
+maintenance plane + durable, idempotent ingest").
+
+The serve loop's lifecycle writes (``ingest_batch``, ``delete_session``,
+``migrate_merge``) are record-then-apply: every op is framed into an
+append-only journal — WITH a client-supplied idempotency key — before it
+touches the Forest. Durability story:
+
+  * **crash mid-op**: the in-memory forest is gone either way; recovery is
+    latest snapshot + replay of the journal tail. A record appended but
+    never applied replays once; an op that crashed before its append was
+    never acknowledged and the client retries it.
+  * **duplicated webhook delivery**: a key already in ``forest.applied_ops``
+    (persisted inside every snapshot) is skipped before it reaches the
+    journal — replayed deliveries are exactly-once end to end.
+  * **snapshot + tail**: ``checkpoint()`` writes an atomic snapshot tagged
+    with the journal sequence watermark (via the same LATEST-marker commit
+    protocol as runtime/checkpoint.py), then rotates the journal; replay
+    applies only records past the watermark whose key is unapplied.
+
+Journal format: back-to-back frames, each ``<u32 body_len, u32 crc32>`` +
+msgpack body ``{seq, op, key, payload}``. A torn tail frame (crash mid-
+append) fails its length or CRC check and cleanly ends replay.
+
+Fault injection: a :class:`repro.runtime.fault_tolerance.CrashInjector`
+passed as ``crash=`` gets a ``tick()`` at every durability transition, so
+tests can kill the "process" at every boundary and assert recovered state
+is digest-identical to an uninterrupted run (tests/test_durability.py).
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Any, Dict, Iterable, List, Optional
+
+import msgpack
+
+from repro.core import maintenance, persistence
+from repro.core.types import Session, Turn
+from repro.runtime import checkpoint as ckpt
+
+_FRAME_HEADER = struct.Struct("<II")          # (body_len, crc32)
+JOURNAL_NAME = "journal.waj"
+SNAPSHOT_FMT = "snapshot_{:08d}.mfz"
+
+
+# ---------------------------------------------------------------------------
+# framed append-only journal
+# ---------------------------------------------------------------------------
+class JournalWriter:
+    """Append-only framed record log. ``fsync=True`` makes every append a
+    durability point (webhook-ack semantics); ``fsync=False`` leaves
+    flush-to-OS group commit (bench mode — a crash can lose the tail but
+    never tear the exactly-once contract, because unacked ops are retried
+    by the client and deduped by key)."""
+
+    def __init__(self, path: str, *, fsync: bool = True):
+        self.path = path
+        self.fsync = fsync
+        self._f = open(path, "ab")
+        self.appends = 0
+
+    def append(self, record: Dict[str, Any]) -> None:
+        body = msgpack.packb(record, use_bin_type=True)
+        self._f.write(_FRAME_HEADER.pack(len(body), zlib.crc32(body)))
+        self._f.write(body)
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self.appends += 1
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+def read_journal(path: str) -> List[Dict[str, Any]]:
+    """All complete records; a torn/corrupt tail frame ends the scan."""
+    if not os.path.exists(path):
+        return []
+    out: List[Dict[str, Any]] = []
+    with open(path, "rb") as f:
+        data = f.read()
+    pos = 0
+    while pos + _FRAME_HEADER.size <= len(data):
+        length, crc = _FRAME_HEADER.unpack_from(data, pos)
+        body = data[pos + _FRAME_HEADER.size: pos + _FRAME_HEADER.size + length]
+        if len(body) < length or zlib.crc32(body) != crc:
+            break                                   # torn tail
+        out.append(msgpack.unpackb(body, raw=False))
+        pos += _FRAME_HEADER.size + length
+    return out
+
+
+# ---------------------------------------------------------------------------
+# op payload (de)serialization
+# ---------------------------------------------------------------------------
+def _session_rec(s: Session) -> Dict[str, Any]:
+    return {"id": s.session_id, "ts": s.ts,
+            "turns": [[t.role, t.text, t.ts, t.turn_id] for t in s.turns]}
+
+
+def _session_from(rec: Dict[str, Any]) -> Session:
+    return Session(rec["id"],
+                   [Turn(role=r, text=x, ts=ts, turn_id=tid)
+                    for r, x, ts, tid in rec["turns"]],
+                   ts=rec["ts"])
+
+
+# ---------------------------------------------------------------------------
+# durable store
+# ---------------------------------------------------------------------------
+class DurableMemForest:
+    """Durability shell around a :class:`MemForestSystem`.
+
+    Directory layout::
+
+        <root>/journal.waj             append-only op log (rotated)
+        <root>/snapshot_<seq>.mfz      atomic forest snapshots
+        <root>/LATEST                  current-snapshot marker
+
+    Open an existing store (or a fresh directory) with :meth:`open` — it
+    performs snapshot + journal-tail recovery. ``snapshot_every=N`` takes an
+    automatic checkpoint after every N applied ops (0 = manual only).
+    """
+
+    def __init__(self, system, root_dir: str, *, fsync: bool = True,
+                 snapshot_every: int = 0, crash=None, keep_snapshots: int = 2,
+                 _next_seq: int = 1):
+        self.system = system
+        self.root = root_dir
+        os.makedirs(root_dir, exist_ok=True)
+        self.crash = crash
+        self.snapshot_every = snapshot_every
+        self.keep_snapshots = keep_snapshots
+        self._seq = _next_seq
+        self.writer = JournalWriter(os.path.join(root_dir, JOURNAL_NAME),
+                                    fsync=fsync)
+        # counters
+        self.ops_applied = 0
+        self.duplicates_skipped = 0
+        self.ops_replayed = 0
+        self.snapshots_taken = 0
+        self._ops_since_snapshot = 0
+
+    # -- plumbing ----------------------------------------------------------
+    @property
+    def forest(self):
+        return self.system.forest
+
+    def _tick(self, event: str) -> None:
+        if self.crash is not None:
+            self.crash.tick(event)
+
+    def _already_applied(self, key: Optional[str]) -> bool:
+        if key is not None and key in self.forest.applied_ops:
+            self.duplicates_skipped += 1
+            return True
+        return False
+
+    def _record(self, op: str, key: Optional[str], payload: Dict[str, Any]) -> str:
+        """Append the intent frame; returns the (possibly auto) key."""
+        seq = self._seq
+        self._seq += 1
+        if key is None:
+            # auto keys are unique, so they never dedup client retries —
+            # they exist so replay bookkeeping is uniform for callers that
+            # did not supply one
+            key = f"auto:{op}:{seq}"
+        self._tick(f"submit:{op}")
+        self.writer.append({"seq": seq, "op": op, "key": key,
+                            "payload": payload})
+        self._tick("journal:append")
+        return key
+
+    def _committed(self, key: str) -> None:
+        self.forest.applied_ops.add(key)
+        self.ops_applied += 1
+        self._ops_since_snapshot += 1
+        self._tick("apply")
+        if self.snapshot_every and self._ops_since_snapshot >= self.snapshot_every:
+            self.checkpoint()
+
+    # -- the durable write path -------------------------------------------
+    def ingest_batch(self, sessions: Iterable[Session], *,
+                     idempotency_key: Optional[str] = None,
+                     defer_flush: bool = False):
+        """Journaled, exactly-once ``MemForestSystem.ingest_batch``. Returns
+        the per-session WriteStats, or None when the key was already
+        applied (duplicate delivery)."""
+        sessions = list(sessions)
+        if self._already_applied(idempotency_key):
+            return None
+        key = self._record("ingest_batch", idempotency_key,
+                           {"sessions": [_session_rec(s) for s in sessions]})
+        stats = self.system.ingest_batch(sessions, defer_flush=defer_flush)
+        self._committed(key)
+        return stats
+
+    def delete_session(self, session_id: str, *,
+                       idempotency_key: Optional[str] = None,
+                       flush: bool = True):
+        """Journaled, exactly-once targeted deletion."""
+        if self._already_applied(idempotency_key):
+            return None
+        key = self._record("delete_session", idempotency_key,
+                           {"session_id": session_id})
+        out = maintenance.delete_session(self.forest, session_id, flush=flush)
+        self._committed(key)
+        return out
+
+    def merge_from(self, other, *, idempotency_key: Optional[str] = None,
+                   flush: bool = True):
+        """Journaled, exactly-once migration merge. ``other`` is a
+        MemForestSystem or a bare Forest; its full state rides in the
+        journal record, so replay reproduces the merge byte-identically
+        even if the source forest is gone by recovery time."""
+        if self._already_applied(idempotency_key):
+            return None
+        src = getattr(other, "forest", other)
+        doc_z = persistence.doc_to_bytes(
+            persistence.forest_to_doc(src, with_derived=True))
+        key = self._record("migrate_merge", idempotency_key,
+                           {"forest_doc_z": doc_z})
+        out = maintenance.migrate_merge(self.forest, src, flush=flush)
+        self._committed(key)
+        return out
+
+    # -- replay ------------------------------------------------------------
+    def _apply_record(self, rec: Dict[str, Any]) -> None:
+        op, payload = rec["op"], rec["payload"]
+        if op == "ingest_batch":
+            self.system.ingest_batch(
+                [_session_from(r) for r in payload["sessions"]])
+        elif op == "delete_session":
+            maintenance.delete_session(self.forest, payload["session_id"])
+        elif op == "migrate_merge":
+            src = persistence.forest_from_doc(
+                persistence.bytes_to_doc(payload["forest_doc_z"]),
+                kernel_impl=self.forest.kernel_impl)
+            maintenance.migrate_merge(self.forest, src)
+        else:
+            raise ValueError(f"unknown journal op {op!r}")
+        self.forest.applied_ops.add(rec["key"])
+        self.ops_replayed += 1
+
+    # -- snapshot + rotation ----------------------------------------------
+    def checkpoint(self) -> str:
+        """Snapshot current state (tagged with the journal watermark), move
+        the LATEST marker, rotate the journal. Crash-safe at every step:
+        the snapshot write is tmp+rename-atomic, the marker flips last, and
+        un-rotated journal records are filtered by the watermark on
+        replay."""
+        self._tick("snapshot:begin")
+        watermark = self._seq - 1
+        name = SNAPSHOT_FMT.format(watermark)
+        persistence.save_forest(self.forest, os.path.join(self.root, name),
+                                extra={"journal_seq": watermark})
+        ckpt.write_latest(self.root, name)
+        self._tick("snapshot:commit")
+        # rotate: atomically replace the journal with an empty file — every
+        # framed record is <= the watermark now
+        self.writer.close()
+        jpath = os.path.join(self.root, JOURNAL_NAME)
+        tmp = jpath + ".tmp"
+        with open(tmp, "wb") as f:
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, jpath)
+        self.writer = JournalWriter(jpath, fsync=self.writer.fsync)
+        self._tick("journal:rotate")
+        # GC old snapshots (keep the newest keep_snapshots)
+        snaps = sorted(n for n in os.listdir(self.root)
+                       if n.startswith("snapshot_") and n.endswith(".mfz"))
+        for n in snaps[:-self.keep_snapshots]:
+            if n != name:
+                os.remove(os.path.join(self.root, n))
+        self.snapshots_taken += 1
+        self._ops_since_snapshot = 0
+        return name
+
+    def close(self) -> None:
+        self.writer.close()
+
+    # -- recovery ----------------------------------------------------------
+    @classmethod
+    def open(cls, root_dir: str, *, config=None, encoder=None,
+             kernel_impl: str = "reference", fsync: bool = True,
+             snapshot_every: int = 0, crash=None,
+             keep_snapshots: int = 2) -> "DurableMemForest":
+        """Crash-safe restore: latest snapshot (if any) + journal-tail
+        replay. Records at or below the snapshot watermark, or whose
+        idempotency key the snapshot already carries, are skipped —
+        duplicated or crash-replayed ops apply exactly once."""
+        from repro.core.memforest import MemForestSystem
+
+        os.makedirs(root_dir, exist_ok=True)
+        watermark = 0
+        name = ckpt.read_latest(root_dir)
+        snap_path = os.path.join(root_dir, name) if name else None
+        if snap_path and os.path.exists(snap_path):
+            doc = persistence.read_doc(snap_path)
+            forest = persistence.forest_from_doc(doc, config,
+                                                 kernel_impl=kernel_impl)
+            watermark = int(doc.get("extra", {}).get("journal_seq", 0))
+            system = MemForestSystem(forest.config, encoder,
+                                     kernel_impl=kernel_impl)
+            system.forest = forest
+            system.retriever.forest = forest
+            system.batcher.forest = forest
+        else:
+            system = MemForestSystem(config, encoder, kernel_impl=kernel_impl)
+
+        records = read_journal(os.path.join(root_dir, JOURNAL_NAME))
+        next_seq = max([watermark] + [r["seq"] for r in records]) + 1
+        store = cls(system, root_dir, fsync=fsync,
+                    snapshot_every=snapshot_every, crash=crash,
+                    keep_snapshots=keep_snapshots, _next_seq=next_seq)
+        for rec in records:
+            if rec["seq"] <= watermark:
+                continue
+            if rec["key"] in store.forest.applied_ops:
+                continue
+            store._apply_record(rec)
+        return store
+
+    # everything else (query, query_batch, scale_stats, save, ...) is
+    # read-only or derived-state work — delegate to the wrapped system
+    def __getattr__(self, item):
+        return getattr(self.system, item)

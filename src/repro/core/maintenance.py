@@ -14,7 +14,7 @@ and are NOT recomputed, which is where the >2x speedup comes from.
 from __future__ import annotations
 
 import copy
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -23,9 +23,14 @@ from repro.core.memtree import TreeArena
 from repro.core.types import CanonicalFact
 
 
-def delete_session(forest: Forest, session_id: str) -> Dict[str, int]:
+def delete_session(forest: Forest, session_id: str, *,
+                   flush: bool = True) -> Dict[str, int]:
     """Targeted deletion: the session registry identifies derived facts,
-    cells, and tree leaves; only invalidated ancestor paths refresh."""
+    cells, and tree leaves; only invalidated ancestor paths refresh.
+
+    ``flush=False`` leaves the invalidated paths in ``forest.dirty_trees``
+    for the maintenance plane (or the next reader) to refresh — persistent
+    state is fully updated either way."""
     reg = forest.session_registry.get(session_id)
     if not reg:
         return {"facts_removed": 0, "leaves_removed": 0}
@@ -52,8 +57,25 @@ def delete_session(forest: Forest, session_id: str) -> Dict[str, int]:
                 leaves_removed += 1
                 forest.dirty_trees.add(scope_key)
     forest.session_registry.pop(session_id, None)
-    forest.flush()
+    if flush:
+        forest.flush()
     return {"facts_removed": facts_removed, "leaves_removed": leaves_removed}
+
+
+def _merge_sources(dst_sources: List[Tuple[str, int]],
+                   new_sources: List[Tuple[str, int]]) -> int:
+    """Union provenance on (session_id, chunk) — appending without dedup
+    made re-running a merge (the journal-retry case) duplicate sources and
+    skew session-registry deletion. Returns sources actually added."""
+    seen = set(map(tuple, dst_sources))
+    added = 0
+    for s in new_sources:
+        s = tuple(s)
+        if s not in seen:
+            seen.add(s)
+            dst_sources.append(s)
+            added += 1
+    return added
 
 
 def _copy_tree_into(dst: Forest, src_tree: TreeArena, scope_key: str,
@@ -92,15 +114,30 @@ def _copy_tree_into(dst: Forest, src_tree: TreeArena, scope_key: str,
     dst.set_root_row(t)
 
 
-def migrate_merge(dst: Forest, src: Forest) -> Dict[str, int]:
+def migrate_merge(dst: Forest, src: Forest, *,
+                  idempotency_key: Optional[str] = None,
+                  flush: bool = True) -> Dict[str, int]:
     """Merge an already-materialized forest into `dst` (paper Fig. 5).
 
-    1. Reconcile canonical facts (key-dedup; sources union).
+    1. Reconcile canonical facts (key-dedup; sources union on
+       (session_id, chunk) — re-running a merge never duplicates
+       provenance).
     2. Matching scopes: bulk time-ordered insert of src leaves -> dirty paths.
     3. Unmatched trees: verbatim copy, NO derived-artifact regeneration.
-    4. One lazy flush over dirty paths.
+    4. One lazy flush over dirty paths (deferrable via ``flush=False``).
+
+    ``idempotency_key``: when given, the merge is exactly-once — a key
+    already in ``dst.applied_ops`` (persisted in snapshots) makes the call
+    a no-op, so journal replay or a duplicated merge webhook cannot
+    double-insert leaves or registry rows.
     """
-    stats = {"facts_added": 0, "facts_merged": 0, "trees_copied": 0, "trees_merged": 0}
+    stats = {"facts_added": 0, "facts_merged": 0, "trees_copied": 0,
+             "trees_merged": 0, "skipped_duplicate": 0}
+    if idempotency_key is not None:
+        if idempotency_key in dst.applied_ops:
+            stats["skipped_duplicate"] = 1
+            return stats
+        dst.applied_ops.add(idempotency_key)
 
     def key(f: CanonicalFact):
         return (f.subject.lower(), f.attribute, f.value.lower(), round(f.ts, 1))
@@ -112,12 +149,13 @@ def migrate_merge(dst: Forest, src: Forest) -> Dict[str, int]:
             continue
         k = key(f)
         if k in existing:
-            dst.facts[existing[k]].sources.extend(f.sources)
+            _merge_sources(dst.facts[existing[k]].sources, f.sources)
             fact_id_map[f.fact_id] = existing[k]
             stats["facts_merged"] += 1
         else:
             nf = copy.copy(f)
-            nf.sources = list(f.sources)
+            nf.sources = []
+            _merge_sources(nf.sources, f.sources)
             nid = dst.add_fact(nf)
             fact_id_map[f.fact_id] = nid
             stats["facts_added"] += 1
@@ -185,10 +223,17 @@ def migrate_merge(dst: Forest, src: Forest) -> Dict[str, int]:
 
     for sid, reg in src.session_registry.items():
         d = dst.session_registry.setdefault(sid, {"facts": [], "cells": []})
-        d["facts"].extend(fact_id_map[f] for f in reg["facts"] if f in fact_id_map)
+        # registry rows dedup like sources: targeted deletion counts on one
+        # row per (session, fact)
+        have = set(d["facts"])
+        for f in reg["facts"]:
+            if f in fact_id_map and fact_id_map[f] not in have:
+                have.add(fact_id_map[f])
+                d["facts"].append(fact_id_map[f])
         d["cells"].extend(cell_id_map[c] for c in reg["cells"] if c in cell_id_map)
 
-    dst.flush()
+    if flush:
+        dst.flush()
     return stats
 
 
@@ -201,14 +246,21 @@ def rematerialize(forest: Forest, *, new_branching: int) -> Forest:
 
     new_cfg = dataclasses.replace(forest.config, branching_factor=new_branching)
     out = Forest(new_cfg, kernel_impl=forest.kernel_impl)
-    out.facts = forest.facts
+    # copy, never alias: facts/cells are mutable records (sources lists grow
+    # on merge, cell_id is rewritten by add_cell) and fact_emb rows are
+    # zeroed by kill_fact — sharing them let a delete_session or add_fact on
+    # either forest corrupt the other. Embedding arrays inside the records
+    # are write-never, so the record copy is shallow on those.
+    out.facts = [dataclasses.replace(f, sources=list(f.sources))
+                 for f in forest.facts]
     out.fact_alive = list(forest.fact_alive)
-    out.fact_emb = forest.fact_emb
-    out.cells = forest.cells
+    out.fact_emb = forest.fact_emb.copy()
+    out.cells = [copy.copy(c) for c in forest.cells]
     out.session_registry = {k: {kk: list(vv) for kk, vv in v.items()}
                             for k, v in forest.session_registry.items()}
     out.scene_centroids = forest.scene_centroids.copy()
     out.scene_counts = list(forest.scene_counts)
+    out.applied_ops = set(forest.applied_ops)
     for skey, tree in forest.trees.items():
         for leaf in tree.leaves_in_order():
             p = tree.payload[leaf]
@@ -220,3 +272,57 @@ def rematerialize(forest: Forest, *, new_branching: int) -> Forest:
                             tree.start_ts[leaf], tree.emb[leaf], tree.text[leaf])
     out.flush()
     return out
+
+
+# ---------------------------------------------------------------------------
+# compaction (maintenance-plane work item)
+# ---------------------------------------------------------------------------
+def tree_dead_fraction(tree: TreeArena) -> float:
+    """Fraction of arena slots occupied by tombstoned nodes."""
+    if tree._n == 0:
+        return 0.0
+    return 1.0 - (sum(tree.alive) / tree._n)
+
+
+def compact_tree(forest: Forest, scope_key: str) -> Dict[str, int]:
+    """Rebuild one tree's arena without its tombstoned nodes.
+
+    ``delete_leaf`` tombstones (alive=False) rather than reclaiming slots,
+    so churned trees accumulate dead arena rows that every flush gather and
+    browse pack still pays for. Compaction re-inserts the live leaves (time
+    order preserved) into a fresh arena, rewrites the affected placement
+    rows, and leaves the new summaries to the normal lazy flush — persistent
+    state (facts, cells, registry) is untouched.
+    """
+    old = forest.trees[scope_key]
+    live = [(old.payload[l], old.start_ts[l], old.emb[l].copy(), old.text[l])
+            for l in old.leaves_in_order()
+            if old.alive[l] and old.payload[l] is not None]
+    reclaimed = old._n - len(live)
+
+    t = TreeArena(old.tree_id, scope_key, old.kind, old.k, forest.config.embed_dim)
+    forest.trees[scope_key] = t
+    # drop this scope's stale placement rows, then re-add from the new leaves
+    for payload, _ts, _emb, _text in live:
+        pkey = ("fact", payload) if payload >= 0 else ("cell", -payload - 1)
+        rows = forest.placement.get(pkey)
+        if rows:
+            forest.placement[pkey] = [r for r in rows if r[0] != scope_key]
+    for payload, ts, emb, text in live:
+        leaf = t.insert_leaf(payload, ts, emb, text)
+        pkey = ("fact", payload) if payload >= 0 else ("cell", -payload - 1)
+        forest.placement.setdefault(pkey, []).append((scope_key, leaf))
+    forest.set_root_row(t)
+    if live:
+        forest.dirty_trees.add(scope_key)   # summaries regenerate lazily
+    else:
+        forest.dirty_trees.discard(scope_key)
+    return {"nodes_before": old._n, "nodes_after": t._n,
+            "slots_reclaimed": reclaimed, "leaves": len(live)}
+
+
+def compaction_candidates(forest: Forest, *,
+                          min_dead_fraction: float = 0.3) -> List[str]:
+    """Scope keys whose trees have tombstone churn worth compacting."""
+    return [k for k, t in forest.trees.items()
+            if t._deleted_any and tree_dead_fraction(t) >= min_dead_fraction]

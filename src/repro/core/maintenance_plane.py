@@ -1,0 +1,173 @@
+"""Async maintenance plane: summary refresh, compaction, and merge work off
+the serve loop (ROADMAP: "maintenance ... cannot run inline with serving").
+
+The serve path only *marks* work — ingest leaves trees dirty
+(``defer_flush=True``), deletions tombstone leaves, merge requests queue —
+and the :class:`MaintenancePlane` drains it in bounded slices:
+
+  * **cooperative mode** (default): :meth:`run_some` executes up to
+    ``budget`` work units; :class:`repro.serving.engine.ServeEngine` calls
+    it once per decode step, so refresh kernels overlap the decode cadence
+    instead of blocking an ingest or query drain.
+  * **background mode**: :meth:`start_background` runs the same drain on a
+    worker thread under ``self.lock`` — the lock serializes maintenance
+    against serve-side forest access (the Forest itself is not
+    thread-safe).
+
+One work unit = one queued merge, or one tree compaction, or one bounded
+flush slice (``flush_trees_per_unit`` dirty trees through
+``Forest.flush(only=...)``). Chunked flushing is state-equivalent to one
+full flush because dirty paths never cross trees.
+
+Correctness under laziness is unchanged: a reader that arrives before the
+plane catches up pays the remaining flush itself (read-triggered refresh in
+``MemForestSystem.query``), so answers never see stale mandatory state.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core import maintenance
+from repro.core.forest import Forest
+
+
+class MaintenancePlane:
+    def __init__(self, forest: Forest, *, flush_trees_per_unit: int = 4,
+                 compact_min_dead_fraction: float = 0.3):
+        self.forest = forest
+        self.flush_trees_per_unit = flush_trees_per_unit
+        self.compact_min_dead_fraction = compact_min_dead_fraction
+        self.lock = threading.RLock()
+        self._merge_q: Deque[Tuple[Forest, Optional[str]]] = deque()
+        self._compact_q: Deque[str] = deque()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        # counters
+        self.units_run = 0
+        self.trees_flushed = 0
+        self.merges_done = 0
+        self.compactions_done = 0
+        self.slots_reclaimed = 0
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+    def schedule_merge(self, src, *, idempotency_key: Optional[str] = None) -> None:
+        """Queue a migration merge (src: Forest or MemForestSystem)."""
+        with self.lock:
+            self._merge_q.append((getattr(src, "forest", src), idempotency_key))
+
+    def schedule_compaction(self, scope_key: Optional[str] = None) -> int:
+        """Queue one tree — or scan the forest for every tombstone-heavy
+        tree — for compaction. Returns how many were queued."""
+        with self.lock:
+            if scope_key is not None:
+                self._compact_q.append(scope_key)
+                return 1
+            cands = maintenance.compaction_candidates(
+                self.forest, min_dead_fraction=self.compact_min_dead_fraction)
+            queued = [k for k in cands if k not in self._compact_q]
+            self._compact_q.extend(queued)
+            return len(queued)
+
+    def pending(self) -> int:
+        """Outstanding work units (approximate for flush slices)."""
+        with self.lock:
+            flush_units = -(-len(self.forest.dirty_trees) //
+                            max(self.flush_trees_per_unit, 1))
+            return len(self._merge_q) + len(self._compact_q) + flush_units
+
+    # ------------------------------------------------------------------
+    # draining
+    # ------------------------------------------------------------------
+    def _run_one(self) -> bool:
+        """One work unit; returns False when there was nothing to do.
+        Priority: merges (they add dirty trees), then compactions, then a
+        flush slice — so structural work lands before its summaries
+        regenerate."""
+        if self._merge_q:
+            src, key = self._merge_q.popleft()
+            maintenance.migrate_merge(self.forest, src,
+                                      idempotency_key=key, flush=False)
+            self.merges_done += 1
+            return True
+        if self._compact_q:
+            scope = self._compact_q.popleft()
+            if scope in self.forest.trees:
+                stats = maintenance.compact_tree(self.forest, scope)
+                self.slots_reclaimed += stats["slots_reclaimed"]
+                self.compactions_done += 1
+            return True
+        if self.forest.dirty_trees:
+            chunk = set(sorted(self.forest.dirty_trees)
+                        [: self.flush_trees_per_unit])
+            self.forest.flush(only=chunk)
+            self.trees_flushed += len(chunk)
+            return True
+        return False
+
+    def run_some(self, budget: int = 1) -> Dict[str, int]:
+        """Drain up to ``budget`` work units. Safe from any thread (takes
+        the plane lock). Returns {"units": executed, "pending": left}."""
+        done = 0
+        with self.lock:
+            for _ in range(max(budget, 0)):
+                if not self._run_one():
+                    break
+                done += 1
+                self.units_run += 1
+            return {"units": done, "pending": self.pending()}
+
+    def drain(self, max_units: int = 100000) -> int:
+        """Run until no work remains; returns units executed."""
+        total = 0
+        while max_units > 0:
+            step = self.run_some(min(max_units, 64))
+            total += step["units"]
+            max_units -= max(step["units"], 1)
+            if step["units"] == 0:
+                break
+        return total
+
+    # ------------------------------------------------------------------
+    # background worker mode
+    # ------------------------------------------------------------------
+    def start_background(self, *, interval_s: float = 0.002,
+                         budget_per_wake: int = 4) -> None:
+        """Move draining to a worker thread. Serve-side forest access must
+        then also hold ``self.lock`` (ServeEngine does when built with a
+        plane)."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if self.run_some(budget_per_wake)["units"] == 0:
+                    time.sleep(interval_s)
+
+        self._thread = threading.Thread(target=loop, name="memforest-maint",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop_background(self, *, drain_first: bool = True) -> None:
+        if self._thread is None:
+            return
+        if drain_first:
+            self.drain()
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._thread = None
+
+    def metrics(self) -> Dict[str, int]:
+        return {
+            "maintenance_units": self.units_run,
+            "maintenance_trees_flushed": self.trees_flushed,
+            "maintenance_merges": self.merges_done,
+            "maintenance_compactions": self.compactions_done,
+            "maintenance_slots_reclaimed": self.slots_reclaimed,
+            "maintenance_pending": self.pending(),
+        }

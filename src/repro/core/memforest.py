@@ -84,18 +84,25 @@ class MemForestSystem:
         self.write_stats.add(stats)
         return stats
 
-    def ingest_batch(self, sessions: List[Session]) -> List[WriteStats]:
+    def ingest_batch(self, sessions: List[Session], *,
+                     defer_flush: bool = False) -> List[WriteStats]:
         """Batched write path: N sessions, ONE encoder forward, ONE lazy
         flush whose tree_refresh batches span every session's dirty trees
         (cross-tenant parallelism). State-equivalent to calling
         ingest_session on each session in order.
+
+        ``defer_flush=True`` skips the flush and leaves the dirty trees for
+        the maintenance plane (core/maintenance_plane.py) or the next
+        reader — the serve engine uses this so ingest drains never block on
+        refresh kernels.
 
         Eager mode has no batch form (it refreshes per insert by
         definition), so it falls back to the sequential loop."""
         if self.eager:
             return [self.ingest_session(s) for s in sessions]
         stats = self.batcher.ingest(
-            sessions, flush=not self.config.read_triggered_refresh)
+            sessions,
+            flush=not (defer_flush or self.config.read_triggered_refresh))
         for s in stats:
             self.write_stats.add(s)
         return stats
@@ -148,14 +155,22 @@ class MemForestSystem:
     # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
-    def merge_from(self, other: "MemForestSystem") -> Dict[str, int]:
-        return maintenance.migrate_merge(self.forest, other.forest)
+    def merge_from(self, other: "MemForestSystem", *,
+                   idempotency_key: Optional[str] = None) -> Dict[str, int]:
+        return maintenance.migrate_merge(self.forest, other.forest,
+                                         idempotency_key=idempotency_key)
 
     def delete_session(self, session_id: str) -> Dict[str, int]:
         return maintenance.delete_session(self.forest, session_id)
 
     def scale_stats(self) -> Dict[str, int]:
         return self.forest.scale_stats()
+
+    def state_digest(self) -> str:
+        """Content hash of persistent state (persistence.forest_state_digest)
+        — the state-identity relation recovery tests compare against."""
+        from repro.core import persistence
+        return persistence.forest_state_digest(self.forest)
 
     # ------------------------------------------------------------------
     # durability

@@ -4,16 +4,25 @@ state is the source of truth ... derived artifacts can be regenerated").
 Snapshot format (msgpack + tagged compression — zstd when available, stdlib
 zlib fallback — single file):
   * persistent state: canonical facts, dialogue cells, scope assignments,
-    tree STRUCTURE, placement maps, session registry, scene cluster state;
+    tree STRUCTURE, placement maps, session registry, scene cluster state,
+    applied idempotency keys (exactly-once bookkeeping for the write-ahead
+    journal, core/journal.py);
   * derived artifacts (node embeddings, summaries, root rows) are stored
     too by default — restore is then instant — but `restore(..., \
     rematerialize_derived=True)` drops them and regenerates everything from
     persistent state via the normal lazy flush, exercising the paper's
     migration path ("regenerate selected derived artifacts ... without
     replaying the session stream").
+
+The doc-level API (`forest_to_doc` / `forest_from_doc` / `read_doc`) is
+shared by three consumers: file snapshots here, the migrate-merge payloads
+the write-ahead journal must replay byte-identically, and the structural
+`forest_state_digest` the recovery tests compare crash-replayed state
+against.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 from typing import Any, Dict, Optional
 
@@ -26,7 +35,9 @@ from repro.core.forest import Forest
 from repro.core.memtree import TreeArena
 from repro.core.types import CanonicalFact, DialogueCell
 
-FORMAT_VERSION = 1
+# v2 adds "applied_ops" (journal exactly-once keys) and "extra" (journal
+# watermark); v1 snapshots load with both empty.
+FORMAT_VERSION = 2
 
 
 def _fact_rec(f: CanonicalFact) -> Dict[str, Any]:
@@ -51,9 +62,11 @@ def _tree_rec(t: TreeArena, with_derived: bool) -> Dict[str, Any]:
     }
 
 
-def save_forest(forest: Forest, path: str, *, with_derived: bool = True) -> str:
+def forest_to_doc(forest: Forest, *, with_derived: bool = True,
+                  extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Serialize a forest to a plain msgpack-able document."""
     cfg = forest.config
-    doc = {
+    return {
         "version": FORMAT_VERSION,
         "config": {
             "chunk_turns": cfg.chunk_turns, "branching_factor": cfg.branching_factor,
@@ -67,7 +80,8 @@ def save_forest(forest: Forest, path: str, *, with_derived: bool = True) -> str:
              "emb": c.emb.astype(np.float32).tobytes() if c.emb is not None else b""}
             for c in forest.cells
         ],
-        "trees": [_tree_rec(t, with_derived) for t in forest.trees.values()],
+        "trees": [_tree_rec(forest.trees[k], with_derived)
+                  for k in forest._tree_order],
         "tree_order": list(forest._tree_order),
         "placement": [
             [k[0], k[1], [list(v) for v in vs]]
@@ -79,9 +93,24 @@ def save_forest(forest: Forest, path: str, *, with_derived: bool = True) -> str:
         },
         "scene_centroids": forest.scene_centroids.astype(np.float32).tobytes(),
         "scene_counts": list(forest.scene_counts),
+        "applied_ops": sorted(forest.applied_ops),
+        "extra": extra or {},
         "with_derived": with_derived,
     }
-    payload = compression.compress(msgpack.packb(doc, use_bin_type=True))
+
+
+def doc_to_bytes(doc: Dict[str, Any]) -> bytes:
+    return compression.compress(msgpack.packb(doc, use_bin_type=True))
+
+
+def bytes_to_doc(payload: bytes) -> Dict[str, Any]:
+    return msgpack.unpackb(compression.decompress(payload), raw=False)
+
+
+def save_forest(forest: Forest, path: str, *, with_derived: bool = True,
+                extra: Optional[Dict[str, Any]] = None) -> str:
+    payload = doc_to_bytes(forest_to_doc(forest, with_derived=with_derived,
+                                         extra=extra))
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(payload)
@@ -91,12 +120,15 @@ def save_forest(forest: Forest, path: str, *, with_derived: bool = True) -> str:
     return path
 
 
-def load_forest(path: str, config: Optional[MemForestConfig] = None,
-                *, rematerialize_derived: bool = False,
-                kernel_impl: str = "reference") -> Forest:
+def read_doc(path: str) -> Dict[str, Any]:
     with open(path, "rb") as f:
-        doc = msgpack.unpackb(compression.decompress(f.read()), raw=False)
-    assert doc["version"] == FORMAT_VERSION
+        return bytes_to_doc(f.read())
+
+
+def forest_from_doc(doc: Dict[str, Any], config: Optional[MemForestConfig] = None,
+                    *, rematerialize_derived: bool = False,
+                    kernel_impl: str = "reference") -> Forest:
+    assert doc["version"] in (1, FORMAT_VERSION), doc["version"]
     cfg = config or MemForestConfig(
         chunk_turns=doc["config"]["chunk_turns"],
         branching_factor=doc["config"]["branching_factor"],
@@ -115,12 +147,15 @@ def load_forest(path: str, config: Optional[MemForestConfig] = None,
             sources=[tuple(s) for s in rec["sources"]], emb=emb,
         )
         forest.facts.append(f)
-        forest.fact_alive.append(True)
     forest.fact_alive = list(doc["fact_alive"])
     cap = max(64, 1 << max(len(forest.facts) - 1, 0).bit_length())
     forest.fact_emb = np.zeros((cap, dim), np.float32)
     for f in forest.facts:
-        if f.emb is not None:
+        # dead facts keep their record (provenance) but their index row must
+        # stay zeroed — restoring it would resurrect deleted facts in
+        # topk_sim. The device cache starts at None, so the first
+        # fact_index_device() uploads exactly this host state.
+        if f.emb is not None and forest.fact_alive[f.fact_id]:
             forest.fact_emb[f.fact_id] = f.emb
 
     for rec in doc["cells"]:
@@ -164,6 +199,7 @@ def load_forest(path: str, config: Optional[MemForestConfig] = None,
     forest.scene_centroids = sc.reshape(-1, dim).copy() if sc.size else \
         np.zeros((0, dim), np.float32)
     forest.scene_counts = list(doc["scene_counts"])
+    forest.applied_ops = set(doc.get("applied_ops", []))
 
     if has_derived:
         for t in forest.trees.values():
@@ -189,3 +225,25 @@ def load_forest(path: str, config: Optional[MemForestConfig] = None,
             forest.dirty_trees.add(t.scope_key)
         forest.flush()
     return forest
+
+
+def load_forest(path: str, config: Optional[MemForestConfig] = None,
+                *, rematerialize_derived: bool = False,
+                kernel_impl: str = "reference") -> Forest:
+    return forest_from_doc(read_doc(path), config,
+                           rematerialize_derived=rematerialize_derived,
+                           kernel_impl=kernel_impl)
+
+
+def forest_state_digest(forest: Forest) -> str:
+    """Content hash of the forest's PERSISTENT state (facts, cells, tree
+    structure, placement, registry, scenes, applied keys) — derived
+    artifacts (summaries, node embeddings, root rows, flush bookkeeping) are
+    excluded, so two forests that differ only in how far their lazy flush
+    has progressed digest equal. This is the state-identity relation the
+    crash-recovery tests assert: snapshot + journal replay must reproduce
+    the uninterrupted run's digest bit-for-bit."""
+    doc = forest_to_doc(forest, with_derived=False)
+    doc.pop("extra", None)
+    return hashlib.sha256(
+        msgpack.packb(doc, use_bin_type=True)).hexdigest()

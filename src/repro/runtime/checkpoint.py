@@ -32,6 +32,30 @@ from repro import compression
 _LEAVES_PER_SHARD = 64
 
 
+# ---------------------------------------------------------------------------
+# LATEST marker: crash-safe "current checkpoint" pointer, shared by the
+# model-state checkpoints below and the memory-substrate snapshot+journal
+# store (core/journal.py) — one commit protocol for both recovery points.
+# ---------------------------------------------------------------------------
+def write_latest(dir_path: str, name: str) -> None:
+    """Atomically point <dir>/LATEST at `name` (fsync'd tmp + rename)."""
+    tmp = os.path.join(dir_path, "LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(dir_path, "LATEST"))
+
+
+def read_latest(dir_path: str) -> Optional[str]:
+    """Name the LATEST marker points at, or None when absent."""
+    marker = os.path.join(dir_path, "LATEST")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        return f.read().strip()
+
+
 def _path_str(keypath) -> str:
     parts = []
     for k in keypath:
@@ -99,11 +123,7 @@ def save(ckpt_dir: str, step: int, state: Any, *, extra: Optional[Dict] = None,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)           # atomic commit
-    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
-        f.write(os.path.basename(final))
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"), os.path.join(ckpt_dir, "LATEST"))
+    write_latest(ckpt_dir, os.path.basename(final))
 
     _gc(ckpt_dir, keep)
     return final
@@ -119,11 +139,9 @@ def _gc(ckpt_dir: str, keep: int) -> None:
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    marker = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(marker):
+    name = read_latest(ckpt_dir)
+    if name is None:
         return None
-    with open(marker) as f:
-        name = f.read().strip()
     path = os.path.join(ckpt_dir, name)
     if not os.path.exists(os.path.join(path, "manifest.json")):
         # torn checkpoint: fall back to newest complete one

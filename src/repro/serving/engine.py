@@ -22,9 +22,17 @@ queued via ``submit_query`` drain between decode steps as ONE
 share the encoder forward, the fused topk_sim index scans, and the
 level-synchronous browse launches (core/retrieval.py). Decode, ingest, and
 query traffic all ride the same continuous-batching loop.
+
+Maintenance lane: when built with a ``maintenance`` plane
+(core/maintenance_plane.py), ingest drains stop flushing inline
+(``defer_flush=True``) and the engine instead runs a bounded slice of
+maintenance work — summary refresh, compaction, queued merges — per step.
+Flushes no longer block the ingest or query drains; they interleave with
+the decode cadence (or run on the plane's background thread).
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -88,7 +96,8 @@ class ServeEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int = 2,
                  memory=None, max_ingest_batch: int = 16,
-                 max_query_batch: int = 32):
+                 max_query_batch: int = 32,
+                 maintenance=None, maintenance_budget: int = 1):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -120,6 +129,13 @@ class ServeEngine:
         self.query_results: Dict[int, object] = {}
         self.query_batches = 0
         self.queries_served = 0
+        # maintenance lane: with a plane attached, ingest drains defer their
+        # flush and the engine drains `maintenance_budget` units of refresh/
+        # compaction/merge work per step instead. The plane's lock guards
+        # forest access when its background thread is running.
+        self.maintenance = maintenance
+        self.maintenance_budget = maintenance_budget
+        self.maintenance_turns = 0
         # prefill-reuse accounting (PrefixCache)
         self.prefills = 0
         self.prefills_reused = 0
@@ -144,14 +160,28 @@ class ServeEngine:
             raise RuntimeError("ServeEngine was built without a memory system")
         self.ingest_queue.append(session)
 
+    def _memory_lock(self):
+        """Forest-access guard: the maintenance plane's lock when one is
+        attached (its background worker may be mutating derived state), a
+        no-op otherwise."""
+        if self.maintenance is not None:
+            return self.maintenance.lock
+        return contextlib.nullcontext()
+
     def _drain_ingest(self) -> int:
         """One ingest-lane turn: everything queued (capped) goes through a
-        single batched write. Returns sessions ingested."""
+        single batched write. With a maintenance plane attached the flush is
+        deferred to the plane — the drain only touches persistent state.
+        Returns sessions ingested."""
         if not self.ingest_queue:
             return 0
         batch = self.ingest_queue[: self.max_ingest_batch]
         del self.ingest_queue[: len(batch)]
-        self.memory.ingest_batch(batch)
+        with self._memory_lock():
+            if self.maintenance is not None:
+                self.memory.ingest_batch(batch, defer_flush=True)
+            else:
+                self.memory.ingest_batch(batch)
         self.ingest_batches += 1
         self.ingest_sessions += len(batch)
         return len(batch)
@@ -186,8 +216,9 @@ class ServeEngine:
         for rid, q, mode, topk in batch:
             groups.setdefault((mode, topk), []).append((rid, q))
         for (mode, topk), items in groups.items():
-            res = self.memory.query_batch(
-                [q for _, q in items], mode=mode, final_topk=topk)
+            with self._memory_lock():
+                res = self.memory.query_batch(
+                    [q for _, q in items], mode=mode, final_topk=topk)
             for (rid, _q), r in zip(items, res):
                 self.query_results[rid] = r
             self.query_batches += 1
@@ -266,6 +297,7 @@ class ServeEngine:
         if not act:
             self._drain_ingest()
             self._drain_queries()
+            self._drain_maintenance()
             return 0
         self.occupancy_sum += len(act) / self.max_batch
         self.steps += 1
@@ -291,7 +323,19 @@ class ServeEngine:
                 finished += 1
         self._drain_ingest()
         self._drain_queries()
+        self._drain_maintenance()
         return finished
+
+    def _drain_maintenance(self) -> int:
+        """One maintenance-lane turn: a bounded slice of refresh/compaction/
+        merge work (no-op when the plane runs its own background thread with
+        budget 0, or when no plane is attached)."""
+        if self.maintenance is None or self.maintenance_budget <= 0:
+            return 0
+        done = self.maintenance.run_some(self.maintenance_budget)["units"]
+        if done:
+            self.maintenance_turns += 1
+        return done
 
     # ------------------------------------------------------------------
     def run_until_drained(self, max_steps: int = 10000) -> List[Request]:
@@ -299,7 +343,11 @@ class ServeEngine:
             if not self.queue and not self.ingest_queue \
                     and not self.query_queue \
                     and all(a is None for a in self.active):
-                break
+                # cooperative maintenance keeps stepping until its backlog
+                # (deferred flushes, compactions, merges) is drained too
+                if self.maintenance is None or self.maintenance_budget <= 0 \
+                        or self.maintenance.pending() == 0:
+                    break
             self.step()
         return self.finished
 
@@ -318,6 +366,8 @@ class ServeEngine:
             "query_batches": self.query_batches,
             "queries_served": self.queries_served,
             "mean_query_batch": self.queries_served / max(self.query_batches, 1),
+            "maintenance_turns": self.maintenance_turns,
+            **(self.maintenance.metrics() if self.maintenance is not None else {}),
         }
 
 

@@ -1,0 +1,374 @@
+"""Durable write path (core/journal.py) + async maintenance plane
+(core/maintenance_plane.py): WAL framing, exactly-once idempotency keys,
+crash-point sweep over every durability boundary, snapshot + journal-tail
+recovery, deferred-flush equivalence, tombstone compaction."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:           # in-repo fallback (tests/_propcheck.py)
+    from _propcheck import given, settings, strategies as st
+
+from repro.config import MemForestConfig
+from repro.core import maintenance, persistence
+from repro.core.journal import (JOURNAL_NAME, DurableMemForest, JournalWriter,
+                                read_journal)
+from repro.core.maintenance_plane import MaintenancePlane
+from repro.core.memforest import MemForestSystem
+from repro.data.synthetic import make_workload
+from repro.runtime.fault_tolerance import CrashInjector, SimulatedCrash
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return make_workload(num_entities=4, num_sessions=6,
+                         transitions_per_entity=2, num_queries=8, seed=11)
+
+
+@pytest.fixture(scope="module")
+def merge_wl():
+    return make_workload(num_entities=3, num_sessions=2,
+                         transitions_per_entity=2, num_queries=2, seed=12)
+
+
+def _build(sessions):
+    mf = MemForestSystem(MemForestConfig())
+    mf.ingest_batch(list(sessions))
+    return mf
+
+
+def _plan(wl, merge_wl):
+    """The op mix every recovery test replays: batched ingests, a targeted
+    deletion, and a migration merge — each with a stable client key so
+    retries after a simulated crash dedup instead of double-applying."""
+    return [
+        ("ingest", "client:i0", wl.sessions[:2]),
+        ("ingest", "client:i1", wl.sessions[2:4]),
+        ("delete", "client:d0", wl.sessions[0].session_id),
+        ("merge", "client:m0", merge_wl.sessions),
+        ("ingest", "client:i2", wl.sessions[4:]),
+    ]
+
+
+def _apply(store, op):
+    kind, key, arg = op
+    if kind == "ingest":
+        store.ingest_batch(arg, idempotency_key=key)
+    elif kind == "delete":
+        store.delete_session(arg, idempotency_key=key)
+    else:
+        store.merge_from(_build(arg), idempotency_key=key)
+
+
+def _run_uninterrupted(root, ops, **kw):
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root, **kw)
+    for op in ops:
+        _apply(store, op)
+    store.close()
+    return store
+
+
+# ---------------------------------------------------------------------------
+# journal framing
+# ---------------------------------------------------------------------------
+def test_journal_frame_roundtrip(tmp_path):
+    p = str(tmp_path / "j.waj")
+    w = JournalWriter(p)
+    recs = [{"seq": i, "op": "ingest_batch", "key": f"k{i}",
+             "payload": {"x": [i] * i}} for i in range(1, 4)]
+    for r in recs:
+        w.append(r)
+    w.close()
+    assert read_journal(p) == recs
+
+
+def test_journal_torn_tail_ends_replay_cleanly(tmp_path):
+    def fresh(name):
+        p = str(tmp_path / name)
+        w = JournalWriter(p)
+        for i in range(3):
+            w.append({"seq": i + 1, "op": "delete_session", "key": f"k{i}",
+                      "payload": {"session_id": "s" * 40}})
+        w.close()
+        return p
+
+    # crash mid-append: the last frame is truncated
+    p = fresh("trunc.waj")
+    with open(p, "rb+") as f:
+        f.truncate(os.path.getsize(p) - 7)
+    assert [r["seq"] for r in read_journal(p)] == [1, 2]
+
+    # crash left a corrupt (CRC-failing) tail instead of a short one
+    p = fresh("crc.waj")
+    with open(p, "rb+") as f:
+        f.seek(-1, os.SEEK_END)
+        f.write(b"\xff")
+    assert [r["seq"] for r in read_journal(p)] == [1, 2]
+
+    # a tail header promising more bytes than exist is also torn — the
+    # complete prefix still replays
+    p = fresh("short.waj")
+    with open(p, "ab") as f:
+        f.write(b"\xff\xff\xff\x7f garbage")
+    assert [r["seq"] for r in read_journal(p)] == [1, 2, 3]
+
+
+def test_missing_journal_reads_empty(tmp_path):
+    assert read_journal(str(tmp_path / "nope.waj")) == []
+
+
+# ---------------------------------------------------------------------------
+# exactly-once idempotency
+# ---------------------------------------------------------------------------
+def test_duplicate_delivery_applies_exactly_once(tmp_path, wl):
+    root = str(tmp_path / "store")
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root)
+    assert store.ingest_batch(wl.sessions[:2], idempotency_key="hook:1") is not None
+    d0 = store.state_digest()
+    n0 = store.scale_stats()
+
+    # duplicated webhook delivery: same key, must be a no-op end to end
+    assert store.ingest_batch(wl.sessions[:2], idempotency_key="hook:1") is None
+    assert store.duplicates_skipped == 1
+    assert store.state_digest() == d0
+    assert store.scale_stats() == n0
+    # the duplicate never reached the journal
+    assert len(read_journal(os.path.join(root, JOURNAL_NAME))) == 1
+    store.close()
+
+
+def test_journaled_merge_idempotent_under_key(tmp_path, wl, merge_wl):
+    root = str(tmp_path / "store")
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root)
+    store.ingest_batch(wl.sessions[:2], idempotency_key="i")
+    src = _build(merge_wl.sessions)
+    assert store.merge_from(src, idempotency_key="m") is not None
+    d0 = store.state_digest()
+    assert store.merge_from(src, idempotency_key="m") is None
+    assert store.state_digest() == d0
+    store.close()
+
+
+def test_durable_path_matches_plain_system(tmp_path, wl, merge_wl):
+    """Journaling is a shell: answers and scale are identical to running the
+    same lifecycle directly on a MemForestSystem."""
+    ops = _plan(wl, merge_wl)
+    store = _run_uninterrupted(str(tmp_path / "store"), ops)
+
+    plain = MemForestSystem(MemForestConfig())
+    for kind, _key, arg in ops:
+        if kind == "ingest":
+            plain.ingest_batch(arg)
+        elif kind == "delete":
+            plain.delete_session(arg)
+        else:
+            plain.merge_from(_build(arg))
+
+    assert store.scale_stats() == plain.scale_stats()
+    got = [r.answer for r in store.query_batch(wl.queries)]
+    want = [r.answer for r in plain.query_batch(wl.queries)]
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# recovery: snapshot + journal tail
+# ---------------------------------------------------------------------------
+def test_recovery_replays_snapshot_plus_tail(tmp_path, wl, merge_wl):
+    ops = _plan(wl, merge_wl)
+    root = str(tmp_path / "store")
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root)
+    for op in ops[:2]:
+        _apply(store, op)
+    store.checkpoint()                      # snapshot covers the first two ops
+    for op in ops[2:]:
+        _apply(store, op)
+    want_digest = store.state_digest()
+    want_answers = [r.answer for r in store.query_batch(wl.queries)]
+    store.close()                           # "crash" after the last append
+
+    rec = DurableMemForest.open(root)
+    assert rec.ops_replayed == len(ops) - 2  # tail only, not the snapshot ops
+    assert rec.state_digest() == want_digest
+    assert [r.answer for r in rec.query_batch(wl.queries)] == want_answers
+    for t in rec.forest.trees.values():
+        t.check_invariants()
+    rec.close()
+
+
+def test_recovery_is_pure_replay_without_snapshot(tmp_path, wl, merge_wl):
+    """No checkpoint ever taken: open() rebuilds the whole state from the
+    journal alone — including the merge, whose source forest rides inside
+    its journal record and no longer exists at recovery time."""
+    ops = _plan(wl, merge_wl)
+    root = str(tmp_path / "store")
+    store = _run_uninterrupted(root, ops)
+    want = store.state_digest()
+    del store                               # the source of truth is now disk
+
+    rec = DurableMemForest.open(root)
+    assert rec.ops_replayed == len(ops)
+    assert rec.state_digest() == want
+    rec.close()
+
+
+def test_reopen_is_stable_fixed_point(tmp_path, wl, merge_wl):
+    """open(); close(); open() — recovery of a recovered store is a no-op
+    state-wise (replay respects applied keys and the snapshot watermark)."""
+    root = str(tmp_path / "store")
+    want = _run_uninterrupted(root, _plan(wl, merge_wl),
+                              snapshot_every=2).state_digest()
+    a = DurableMemForest.open(root)
+    da = a.state_digest()
+    a.checkpoint()
+    a.close()
+    b = DurableMemForest.open(root)
+    assert b.ops_replayed == 0
+    assert da == want == b.state_digest()
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# crash injection: every durability boundary
+# ---------------------------------------------------------------------------
+def _run_with_crash_then_recover(root, ops, crash_at, snapshot_every=2):
+    """Client-side retry loop: on SimulatedCrash the in-memory store is
+    discarded (process death), recovery reopens from disk, and the unacked
+    op is retried under its original idempotency key."""
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root,
+                             snapshot_every=snapshot_every,
+                             crash=CrashInjector(crash_at))
+    crashes = 0
+    for op in ops:
+        while True:
+            try:
+                _apply(store, op)
+                break
+            except SimulatedCrash:
+                crashes += 1
+                store.close()
+                store = DurableMemForest.open(root,
+                                              snapshot_every=snapshot_every)
+    store.close()
+    return store, crashes
+
+
+def test_crash_sweep_every_durability_boundary(tmp_path, wl, merge_wl):
+    ops = _plan(wl, merge_wl)
+    want = _run_uninterrupted(str(tmp_path / "ref"), ops,
+                              snapshot_every=2).state_digest()
+
+    # size the sweep: a no-crash probe records the full event trace
+    probe = CrashInjector(None)
+    _run_uninterrupted(str(tmp_path / "probe"), ops, snapshot_every=2,
+                       crash=probe)
+    assert probe.events >= 3 * len(ops)     # submit/append/apply per op
+    assert "snapshot:commit" in probe.trace and "journal:rotate" in probe.trace
+
+    fired = 0
+    for k in range(1, probe.events + 1):
+        root = str(tmp_path / f"crash_{k:02d}")
+        store, crashes = _run_with_crash_then_recover(root, ops, k)
+        fired += crashes
+        assert store.state_digest() == want, \
+            f"state diverged after crash at event #{k} ({probe.trace[k - 1]})"
+    assert fired == probe.events            # every kill point actually fired
+
+
+@settings(max_examples=4, deadline=None)
+@given(crash_at=st.integers(min_value=1, max_value=60),
+       rot=st.integers(min_value=0, max_value=4))
+def test_prop_any_crash_prefix_recovers_state_identical(crash_at, rot):
+    """Property: for ANY op ordering and ANY kill point, snapshot + journal
+    tail + client retry reconverges to the uninterrupted run's digest. A
+    crash_at beyond the trace simply never fires — the uninterrupted case."""
+    wl = make_workload(num_entities=3, num_sessions=4,
+                       transitions_per_entity=2, num_queries=2,
+                       seed=100 + rot)
+    mwl = make_workload(num_entities=2, num_sessions=2,
+                        transitions_per_entity=2, num_queries=1,
+                        seed=200 + rot)
+    ops = _plan(wl, mwl)
+    ops = ops[rot:] + ops[:rot]             # rotate the op ordering
+    base = tempfile.mkdtemp(prefix="memforest_prop_")
+    want = _run_uninterrupted(os.path.join(base, "ref"), ops,
+                              snapshot_every=2).state_digest()
+    store, _ = _run_with_crash_then_recover(os.path.join(base, "crash"),
+                                            ops, crash_at)
+    assert store.state_digest() == want
+
+
+# ---------------------------------------------------------------------------
+# maintenance plane
+# ---------------------------------------------------------------------------
+def test_plane_drains_deferred_flush_equivalently(wl):
+    ref = MemForestSystem(MemForestConfig())
+    ref.ingest_batch(wl.sessions)           # inline flush
+    want = [r.answer for r in ref.query_batch(wl.queries)]
+
+    mf = MemForestSystem(MemForestConfig())
+    plane = MaintenancePlane(mf.forest, flush_trees_per_unit=3)
+    mf.ingest_batch(wl.sessions, defer_flush=True)
+    assert mf.forest.dirty_trees            # flush actually deferred
+    assert plane.pending() > 0
+
+    # bounded slices: each unit flushes at most flush_trees_per_unit trees
+    first = plane.run_some(1)
+    assert first["units"] == 1 and plane.trees_flushed <= 3
+    plane.drain()
+    assert not mf.forest.dirty_trees and plane.pending() == 0
+    assert [r.answer for r in mf.query_batch(wl.queries)] == want
+    assert plane.metrics()["maintenance_trees_flushed"] >= len(mf.forest.trees) // 2
+    for t in mf.forest.trees.values():
+        t.check_invariants()
+
+
+def test_plane_queued_merge_runs_off_serve_path(wl, merge_wl):
+    mf = _build(wl.sessions)
+    before = mf.scale_stats()["facts"]
+    plane = MaintenancePlane(mf.forest)
+    plane.schedule_merge(_build(merge_wl.sessions), idempotency_key="pm")
+    assert plane.pending() >= 1
+    plane.drain()
+    assert plane.merges_done == 1
+    assert mf.scale_stats()["facts"] > before
+    assert "pm" in mf.forest.applied_ops
+    assert not mf.forest.dirty_trees        # merge's flush slice also drained
+
+
+def test_plane_compaction_reclaims_tombstoned_slots(wl):
+    mf = _build(wl.sessions)
+    for s in wl.sessions[:4]:
+        mf.delete_session(s.session_id)
+    plane = MaintenancePlane(mf.forest, compact_min_dead_fraction=0.01)
+    queued = plane.schedule_compaction()
+    assert queued > 0
+    nodes_before = mf.scale_stats()["nodes"]
+    plane.drain()
+    assert plane.compactions_done == queued
+    assert plane.slots_reclaimed > 0
+    assert mf.scale_stats()["nodes"] <= nodes_before
+    for t in mf.forest.trees.values():
+        t.check_invariants()
+    for r in mf.query_batch(wl.queries):    # compacted forest still serves
+        assert r.answer is not None
+
+
+def test_plane_background_thread_mode(wl):
+    ref = _build(wl.sessions)
+    want = [r.answer for r in ref.query_batch(wl.queries)]
+
+    mf = MemForestSystem(MemForestConfig())
+    plane = MaintenancePlane(mf.forest)
+    plane.start_background(interval_s=0.001, budget_per_wake=2)
+    try:
+        with plane.lock:
+            mf.ingest_batch(wl.sessions, defer_flush=True)
+    finally:
+        plane.stop_background(drain_first=True)
+    assert not mf.forest.dirty_trees
+    assert plane.units_run > 0
+    assert [r.answer for r in mf.query_batch(wl.queries)] == want

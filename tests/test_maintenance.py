@@ -94,3 +94,60 @@ def test_rematerialize_new_branching(wl):
         t.check_invariants()
         assert all(len(t.children[i]) <= 3 for i in range(t._n)
                    if t.alive[i] and t.level[i] > 0)
+
+
+def test_migrate_merge_rerun_with_key_is_noop(wl):
+    """Idempotency contract: replaying a merge under its original key (the
+    journal's crash-retry case) must not change state at all."""
+    from repro.core import persistence
+
+    half = len(wl.sessions) // 2
+    a = _build(wl.sessions[:half])
+    b = _build(wl.sessions[half:])
+    first = a.merge_from(b, idempotency_key="mig:ab")
+    assert first["skipped_duplicate"] == 0
+    d0 = persistence.forest_state_digest(a.forest)
+    s0 = a.scale_stats()
+
+    second = a.merge_from(b, idempotency_key="mig:ab")
+    assert second["skipped_duplicate"] == 1
+    assert second["facts_added"] == second["facts_merged"] == 0
+    assert a.scale_stats() == s0
+    assert persistence.forest_state_digest(a.forest) == d0
+
+
+def test_migrate_merge_dedups_sources_and_registry(wl):
+    """Provenance must stay one row per (session, chunk) / (session, fact)
+    even when the same source forest merges in twice without a key —
+    targeted deletion depends on it."""
+    half = len(wl.sessions) // 2
+    a = _build(wl.sessions[:half])
+    b = _build(wl.sessions[half:])
+    a.merge_from(b)
+    a.merge_from(b)
+    for f in a.forest.facts:
+        assert len(f.sources) == len(set(map(tuple, f.sources))), f.sources
+    for sid, reg in a.forest.session_registry.items():
+        assert len(reg["facts"]) == len(set(reg["facts"])), sid
+
+
+def test_rematerialize_does_not_alias_source_forest(wl):
+    """rematerialize() returns an independent forest: mutating the copy
+    (deletion zeroes fact_emb rows, edits sources and registries in place)
+    must leave the source forest byte-identical."""
+    from repro.core import persistence
+
+    mf = _build(wl.sessions[:4])
+    d0 = persistence.forest_state_digest(mf.forest)
+    f2 = maintenance.rematerialize(mf.forest, new_branching=4)
+
+    assert f2.fact_emb is not mf.forest.fact_emb
+    assert all(c2 is not c1 for c1, c2 in zip(mf.forest.cells, f2.cells))
+    assert all(g.sources is not f.sources
+               for f, g in zip(mf.forest.facts, f2.facts))
+
+    maintenance.delete_session(f2, wl.sessions[0].session_id)
+    f2.fact_emb[: len(f2.facts)] = 0.0
+    for c in f2.cells:
+        c.text = "clobbered"
+    assert persistence.forest_state_digest(mf.forest) == d0

@@ -64,3 +64,46 @@ def test_load_then_continue_ingesting(built, tmp_path):
     assert mf2.scale_stats()["facts"] > before
     for t in mf2.forest.trees.values():
         t.check_invariants()
+
+def test_deleted_facts_stay_dead_after_save_load(tmp_path):
+    """Regression: save -> delete -> save -> load must NOT resurrect deleted
+    facts. load_forest used to repopulate fact_emb rows from the persisted
+    fact records regardless of fact_alive, so tombstoned facts scored again
+    in topk_sim after a restore."""
+    wl = make_workload(num_entities=5, num_sessions=8,
+                       transitions_per_entity=3, num_queries=20, seed=13)
+    mf = MemForestSystem(MemForestConfig())
+    mf.ingest_batch(wl.sessions)
+    mf.save(str(tmp_path / "pre_delete.mfz"))
+
+    dead = []
+    for s in wl.sessions:
+        mf.delete_session(s.session_id)
+        dead = [f.fact_id for f in mf.forest.facts
+                if not mf.forest.fact_alive[f.fact_id]]
+        if dead:
+            break
+    assert dead, "workload produced no fully-dead facts"
+    want = [r.answer for r in mf.query_batch(wl.queries)]
+
+    p = str(tmp_path / "post_delete.mfz")
+    mf.save(p)
+    mf2 = MemForestSystem.load(p)
+
+    # host index rows stay zeroed...
+    for fid in dead:
+        assert not mf2.forest.fact_alive[fid]
+        assert np.linalg.norm(mf2.forest.fact_emb[fid]) == 0.0
+        # ...but provenance is kept for the record
+        assert mf2.forest.facts[fid].emb is not None
+    # ...and so does the device-resident index the batched read path scores
+    dev, n = mf2.forest.fact_index_device()
+    devnp = np.asarray(dev)
+    for fid in dead:
+        assert float(np.abs(devnp[fid]).max()) == 0.0
+
+    # dead facts never surface through retrieval, single or batched
+    for q in wl.queries:
+        facts, _evidence, _stats = mf2.retriever.retrieve(q.text)
+        assert all(mf2.forest.fact_alive[f.fact_id] for f in facts)
+    assert [r.answer for r in mf2.query_batch(wl.queries)] == want

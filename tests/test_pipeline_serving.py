@@ -147,3 +147,41 @@ def test_batched_encoder_server_prefix_accounting():
     assert out.shape == (3, 64)
     assert srv.prefix_tokens_saved > 0
     assert enc.stats.calls == 1   # one batched forward, not three
+
+
+def test_maintenance_lane_defers_flush_off_serve_loop():
+    """With a MaintenancePlane attached, ingest drains defer their flush and
+    the engine retires refresh work in bounded slices between decode steps —
+    answers stay identical to the inline-flush engine."""
+    from repro.config import MemForestConfig
+    from repro.core.maintenance_plane import MaintenancePlane
+    from repro.core.memforest import MemForestSystem
+    from repro.data.synthetic import make_workload
+
+    wl = make_workload(num_entities=4, num_sessions=6,
+                       transitions_per_entity=3, num_queries=10, seed=22)
+    ref = MemForestSystem(MemForestConfig())
+    ref.ingest_batch(wl.sessions)
+    want = [r.answer for r in ref.query_batch(wl.queries)]
+
+    mf = MemForestSystem(MemForestConfig())
+    plane = MaintenancePlane(mf.forest, flush_trees_per_unit=2)
+    cfg = get_smoke_config("llama3_8b")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, memory=mf,
+                      maintenance=plane, maintenance_budget=2)
+    for s in wl.sessions:
+        eng.submit_session(s)
+    eng.submit([5, 6, 7], max_new_tokens=2)    # decode traffic shares the loop
+    eng.run_until_drained()                    # lane retires the deferred flush
+
+    m = eng.metrics()
+    assert m["maintenance_turns"] > 0          # lane actually ran slices
+    assert m["maintenance_pending"] == 0       # drained before exit
+    assert not mf.forest.dirty_trees           # readers won't pay the flush
+
+    rids = [eng.submit_query(q) for q in wl.queries]
+    eng.run_until_drained()
+    got = [eng.pop_query_result(r).answer for r in rids]
+    assert got == want
