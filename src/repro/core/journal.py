@@ -20,7 +20,10 @@ touches the Forest. Durability story:
 
 Journal format: back-to-back frames, each ``<u32 body_len, u32 crc32>`` +
 msgpack body ``{seq, op, key, payload}``. A torn tail frame (crash mid-
-append) fails its length or CRC check and cleanly ends replay.
+append) fails its length or CRC check and cleanly ends replay; recovery
+then truncates the file to its valid prefix, so frames appended after the
+crash never sit behind garbage bytes (which would make them fsync-acked
+yet invisible to every later scan).
 
 Fault injection: a :class:`repro.runtime.fault_tolerance.CrashInjector`
 passed as ``crash=`` gets a ``tick()`` at every durability transition, so
@@ -32,7 +35,7 @@ from __future__ import annotations
 import os
 import struct
 import zlib
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import msgpack
 
@@ -58,7 +61,12 @@ class JournalWriter:
     def __init__(self, path: str, *, fsync: bool = True):
         self.path = path
         self.fsync = fsync
+        existed = os.path.exists(path)
         self._f = open(path, "ab")
+        if fsync and not existed:
+            # a fresh journal's directory entry must be durable too, or the
+            # first acked append can vanish with the file on power loss
+            ckpt.fsync_dir(os.path.dirname(os.path.abspath(path)))
         self.appends = 0
 
     def append(self, record: Dict[str, Any]) -> None:
@@ -75,10 +83,12 @@ class JournalWriter:
             self._f.close()
 
 
-def read_journal(path: str) -> List[Dict[str, Any]]:
-    """All complete records; a torn/corrupt tail frame ends the scan."""
+def scan_journal(path: str) -> Tuple[List[Dict[str, Any]], int]:
+    """(complete records, byte length of the valid prefix). A torn/corrupt
+    tail frame ends the scan; recovery truncates the file to the returned
+    offset so new appends never land after garbage bytes."""
     if not os.path.exists(path):
-        return []
+        return [], 0
     out: List[Dict[str, Any]] = []
     with open(path, "rb") as f:
         data = f.read()
@@ -90,7 +100,12 @@ def read_journal(path: str) -> List[Dict[str, Any]]:
             break                                   # torn tail
         out.append(msgpack.unpackb(body, raw=False))
         pos += _FRAME_HEADER.size + length
-    return out
+    return out, pos
+
+
+def read_journal(path: str) -> List[Dict[str, Any]]:
+    """All complete records; a torn/corrupt tail frame ends the scan."""
+    return scan_journal(path)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +242,22 @@ class DurableMemForest:
         self._committed(key)
         return out
 
+    def compact_tree(self, scope_key: str, *,
+                     idempotency_key: Optional[str] = None):
+        """Journaled tombstone compaction. Compaction rewrites persistent
+        state (the tree arena and its placement rows), so it must ride the
+        journal like any other lifecycle write — otherwise a crash after an
+        unjournaled compaction recovers to a different state digest than the
+        pre-crash store. Rebuild is deterministic (live leaves re-inserted
+        in time order), so replay reproduces it exactly."""
+        if self._already_applied(idempotency_key):
+            return None
+        key = self._record("compact_tree", idempotency_key,
+                           {"scope_key": scope_key})
+        out = maintenance.compact_tree(self.forest, scope_key)
+        self._committed(key)
+        return out
+
     # -- replay ------------------------------------------------------------
     def _apply_record(self, rec: Dict[str, Any]) -> None:
         op, payload = rec["op"], rec["payload"]
@@ -240,6 +271,8 @@ class DurableMemForest:
                 persistence.bytes_to_doc(payload["forest_doc_z"]),
                 kernel_impl=self.forest.kernel_impl)
             maintenance.migrate_merge(self.forest, src)
+        elif op == "compact_tree":
+            maintenance.compact_tree(self.forest, payload["scope_key"])
         else:
             raise ValueError(f"unknown journal op {op!r}")
         self.forest.applied_ops.add(rec["key"])
@@ -268,12 +301,15 @@ class DurableMemForest:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, jpath)
+        ckpt.fsync_dir(self.root)
         self.writer = JournalWriter(jpath, fsync=self.writer.fsync)
         self._tick("journal:rotate")
-        # GC old snapshots (keep the newest keep_snapshots)
+        # GC old snapshots (keep the newest keep_snapshots; the one the
+        # LATEST marker points at is always kept). snaps[:-k] would be wrong
+        # for k=0 — it keeps everything instead of nothing.
         snaps = sorted(n for n in os.listdir(self.root)
                        if n.startswith("snapshot_") and n.endswith(".mfz"))
-        for n in snaps[:-self.keep_snapshots]:
+        for n in snaps[:max(0, len(snaps) - self.keep_snapshots)]:
             if n != name:
                 os.remove(os.path.join(self.root, n))
         self.snapshots_taken += 1
@@ -312,7 +348,18 @@ class DurableMemForest:
         else:
             system = MemForestSystem(config, encoder, kernel_impl=kernel_impl)
 
-        records = read_journal(os.path.join(root_dir, JOURNAL_NAME))
+        jpath = os.path.join(root_dir, JOURNAL_NAME)
+        records, valid_len = scan_journal(jpath)
+        if os.path.exists(jpath) and os.path.getsize(jpath) > valid_len:
+            # crash mid-append left a torn tail frame. It MUST be cut before
+            # the writer reopens in append mode: frames written after the
+            # garbage would be fsync-acked yet unreachable — every later
+            # recovery stops scanning at the torn frame and silently drops
+            # them, breaking the exactly-once contract.
+            with open(jpath, "rb+") as f:
+                f.truncate(valid_len)
+                f.flush()
+                os.fsync(f.fileno())
         next_seq = max([watermark] + [r["seq"] for r in records]) + 1
         store = cls(system, root_dir, fsync=fsync,
                     snapshot_every=snapshot_every, crash=crash,

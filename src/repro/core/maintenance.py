@@ -102,7 +102,11 @@ def _copy_tree_into(dst: Forest, src_tree: TreeArena, scope_key: str,
     t.emb = src_tree.emb[:max(n, 8)].copy()
     t.root = src_tree.root
     t._n = n
-    t.dirty = set()
+    # a src serialized under deferred flush carries dirty paths whose copied
+    # summaries are stale — propagate the marks so they still refresh
+    t.dirty = set(src_tree.dirty)
+    if t.dirty:
+        dst.dirty_trees.add(scope_key)
     # placement rows for the copied leaves
     for nid in range(n):
         if t.alive[nid] and t.level[nid] == 0 and t.payload[nid] is not None:
@@ -291,8 +295,12 @@ def compact_tree(forest: Forest, scope_key: str) -> Dict[str, int]:
     so churned trees accumulate dead arena rows that every flush gather and
     browse pack still pays for. Compaction re-inserts the live leaves (time
     order preserved) into a fresh arena, rewrites the affected placement
-    rows, and leaves the new summaries to the normal lazy flush — persistent
-    state (facts, cells, registry) is untouched.
+    rows, and leaves the new summaries to the normal lazy flush. Facts,
+    cells, and the session registry are untouched, but the rewritten tree
+    arena and placement rows ARE persistent state (forest_state_digest
+    covers them) — on a durable store, compact through
+    ``DurableMemForest.compact_tree`` so a crash replays it and recovers
+    the same digest. The rebuild is deterministic, so replay is exact.
     """
     old = forest.trees[scope_key]
     live = [(old.payload[l], old.start_ts[l], old.emb[l].copy(), old.text[l])

@@ -36,8 +36,14 @@ from repro.core.forest import Forest
 
 class MaintenancePlane:
     def __init__(self, forest: Forest, *, flush_trees_per_unit: int = 4,
-                 compact_min_dead_fraction: float = 0.3):
+                 compact_min_dead_fraction: float = 0.3, durable=None):
+        """``durable``: a :class:`repro.core.journal.DurableMemForest`
+        wrapping the same forest. When given, compactions run through its
+        journaled ``compact_tree`` op — compaction rewrites persistent state
+        (tree arena + placement rows), so on a durable store it must be
+        journaled for crash recovery to reproduce the pre-crash digest."""
         self.forest = forest
+        self.durable = durable
         self.flush_trees_per_unit = flush_trees_per_unit
         self.compact_min_dead_fraction = compact_min_dead_fraction
         self.lock = threading.RLock()
@@ -97,7 +103,10 @@ class MaintenancePlane:
         if self._compact_q:
             scope = self._compact_q.popleft()
             if scope in self.forest.trees:
-                stats = maintenance.compact_tree(self.forest, scope)
+                if self.durable is not None:
+                    stats = self.durable.compact_tree(scope)
+                else:
+                    stats = maintenance.compact_tree(self.forest, scope)
                 self.slots_reclaimed += stats["slots_reclaimed"]
                 self.compactions_done += 1
             return True

@@ -31,12 +31,17 @@ import numpy as np
 
 from repro import compression
 from repro.config import MemForestConfig
+from repro.runtime.checkpoint import fsync_dir
 from repro.core.forest import Forest
 from repro.core.memtree import TreeArena
 from repro.core.types import CanonicalFact, DialogueCell
 
-# v2 adds "applied_ops" (journal exactly-once keys) and "extra" (journal
-# watermark); v1 snapshots load with both empty.
+# v2 adds "applied_ops" (journal exactly-once keys), "extra" (journal
+# watermark), and — in with_derived docs — the dirty-flush bookkeeping
+# ("dirty_trees" + per-tree "dirty" node sets). A snapshot taken under
+# deferred flush bakes in stale internal summaries; without the dirty marks
+# a restore would report has_derived state as clean and read-triggered
+# refresh would never repair it. v1 docs load with all of these empty.
 FORMAT_VERSION = 2
 
 
@@ -59,6 +64,10 @@ def _tree_rec(t: TreeArena, with_derived: bool) -> Dict[str, Any]:
         "alive": list(t.alive), "deleted_any": t._deleted_any,
         "text": list(t.text) if with_derived else [""] * t._n,
         "emb": t.emb[:t._n].astype(np.float32).tobytes() if with_derived else b"",
+        # dirty bookkeeping rides only with the derived state it qualifies;
+        # the with_derived=False doc feeds forest_state_digest, which must
+        # stay independent of flush progress
+        "dirty": sorted(t.dirty) if with_derived else [],
     }
 
 
@@ -94,6 +103,7 @@ def forest_to_doc(forest: Forest, *, with_derived: bool = True,
         "scene_centroids": forest.scene_centroids.astype(np.float32).tobytes(),
         "scene_counts": list(forest.scene_counts),
         "applied_ops": sorted(forest.applied_ops),
+        "dirty_trees": sorted(forest.dirty_trees) if with_derived else [],
         "extra": extra or {},
         "with_derived": with_derived,
     }
@@ -117,6 +127,7 @@ def save_forest(forest: Forest, path: str, *, with_derived: bool = True,
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
     return path
 
 
@@ -184,6 +195,11 @@ def forest_from_doc(doc: Dict[str, Any], config: Optional[MemForestConfig] = Non
         if rec["emb"]:
             t.emb[:n] = np.frombuffer(rec["emb"], np.float32).reshape(n, dim)
         t.root = rec["root"]
+        if has_derived:
+            # snapshots taken under deferred flush carry their dirty paths;
+            # re-marking them keeps read-triggered refresh (and the
+            # maintenance plane) able to repair the stale summaries
+            t.dirty = set(rec.get("dirty", []))
         forest.trees[rec["scope_key"]] = t
     forest._tree_order = list(doc["tree_order"])
     cap_t = max(8, 1 << max(len(forest._tree_order) - 1, 0).bit_length())
@@ -202,6 +218,7 @@ def forest_from_doc(doc: Dict[str, Any], config: Optional[MemForestConfig] = Non
     forest.applied_ops = set(doc.get("applied_ops", []))
 
     if has_derived:
+        forest.dirty_trees = set(doc.get("dirty_trees", []))
         for t in forest.trees.values():
             forest._root_matrix[t.tree_id] = t.root_emb()
     else:

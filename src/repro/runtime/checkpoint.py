@@ -7,7 +7,8 @@ Layout:
         shard_<i>.bin        (compressed msgpack of leaf buffers; zstd when
                              available, stdlib zlib otherwise — tagged)
 
-Commit = fsync files -> atomic rename of the directory -> update LATEST file.
+Commit = fsync files -> atomic rename of the directory -> fsync the parent
+directory (the rename itself must be durable) -> update LATEST file.
 A crash mid-write leaves only a .tmp directory, which restore() ignores —
 the previous checkpoint remains the recovery point (fault tolerance test
 covers this). Multi-host: each process writes shard files for its addressable
@@ -37,14 +38,32 @@ _LEAVES_PER_SHARD = 64
 # model-state checkpoints below and the memory-substrate snapshot+journal
 # store (core/journal.py) — one commit protocol for both recovery points.
 # ---------------------------------------------------------------------------
+def fsync_dir(dir_path: str) -> None:
+    """fsync a directory so a just-committed rename survives power loss —
+    os.replace alone orders the data, not the directory entry. Best-effort
+    on platforms whose directory fds reject fsync."""
+    try:
+        fd = os.open(dir_path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def write_latest(dir_path: str, name: str) -> None:
-    """Atomically point <dir>/LATEST at `name` (fsync'd tmp + rename)."""
+    """Atomically point <dir>/LATEST at `name` (fsync'd tmp + rename +
+    directory fsync)."""
     tmp = os.path.join(dir_path, "LATEST.tmp")
     with open(tmp, "w") as f:
         f.write(name)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, os.path.join(dir_path, "LATEST"))
+    fsync_dir(dir_path)
 
 
 def read_latest(dir_path: str) -> Optional[str]:
@@ -123,6 +142,7 @@ def save(ckpt_dir: str, step: int, state: Any, *, extra: Optional[Dict] = None,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)           # atomic commit
+    fsync_dir(ckpt_dir)
     write_latest(ckpt_dir, os.path.basename(final))
 
     _gc(ckpt_dir, keep)

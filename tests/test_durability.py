@@ -60,6 +60,13 @@ def _apply(store, op):
         store.ingest_batch(arg, idempotency_key=key)
     elif kind == "delete":
         store.delete_session(arg, idempotency_key=key)
+    elif kind == "compact":
+        # deterministic scope selection + per-scope client keys: retried
+        # after a crash, already-compacted trees drop out of the candidate
+        # set (dead fraction 0) or dedup on their key
+        for scope in sorted(maintenance.compaction_candidates(
+                store.forest, min_dead_fraction=0.01)):
+            store.compact_tree(scope, idempotency_key=f"{key}:{scope}")
     else:
         store.merge_from(_build(arg), idempotency_key=key)
 
@@ -119,6 +126,30 @@ def test_journal_torn_tail_ends_replay_cleanly(tmp_path):
 
 def test_missing_journal_reads_empty(tmp_path):
     assert read_journal(str(tmp_path / "nope.waj")) == []
+
+
+def test_recovery_truncates_torn_tail_before_appending(tmp_path, wl):
+    """A torn tail frame must be cut on open(): appends landing AFTER the
+    garbage would be fsync-acked yet dropped by every later scan."""
+    root = str(tmp_path / "store")
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root)
+    store.ingest_batch(wl.sessions[:2], idempotency_key="i0")
+    store.close()
+    jpath = os.path.join(root, JOURNAL_NAME)
+    with open(jpath, "ab") as f:                # crash mid-append
+        f.write(b"\xde\xad\xbe\xef torn frame garbage")
+    torn_size = os.path.getsize(jpath)
+
+    rec = DurableMemForest.open(root)
+    assert os.path.getsize(jpath) < torn_size   # tail truncated, not kept
+    rec.ingest_batch(wl.sessions[2:4], idempotency_key="i1")
+    want = rec.state_digest()
+    rec.close()
+
+    rec2 = DurableMemForest.open(root)          # i1 must survive THIS recovery
+    assert rec2.ops_replayed == 2
+    assert rec2.state_digest() == want
+    rec2.close()
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +246,73 @@ def test_recovery_is_pure_replay_without_snapshot(tmp_path, wl, merge_wl):
     rec.close()
 
 
+def test_checkpoint_under_deferred_flush_recovers_fresh_summaries(tmp_path, wl):
+    """A snapshot taken while flushes are deferred bakes in stale internal
+    summaries; it must also carry the dirty marks, or the restored store
+    reports clean derived state and read-triggered refresh never repairs
+    the staleness."""
+    ref = MemForestSystem(MemForestConfig())
+    ref.ingest_batch(list(wl.sessions))          # inline flush
+    want = [r.answer for r in ref.query_batch(wl.queries)]
+
+    root = str(tmp_path / "store")
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root)
+    store.ingest_batch(wl.sessions, idempotency_key="i", defer_flush=True)
+    assert store.forest.dirty_trees              # snapshot lands mid-deferral
+    store.checkpoint()
+    store.close()
+
+    rec = DurableMemForest.open(root)
+    assert rec.ops_replayed == 0                 # the snapshot covers the op...
+    assert rec.forest.dirty_trees                # ...and re-marks its debt
+    assert any(t.dirty for t in rec.forest.trees.values())
+    assert [r.answer for r in rec.query_batch(wl.queries)] == want
+    assert not rec.forest.dirty_trees            # reader paid the flush
+    rec.close()
+
+
+def test_journaled_compaction_recovers_and_dedups(tmp_path, wl):
+    root = str(tmp_path / "store")
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root)
+    store.ingest_batch(wl.sessions, idempotency_key="i")
+    for s in wl.sessions[:3]:
+        store.delete_session(s.session_id, idempotency_key=f"d:{s.session_id}")
+    scopes = sorted(maintenance.compaction_candidates(
+        store.forest, min_dead_fraction=0.01))
+    assert scopes
+    for scope in scopes:
+        assert store.compact_tree(scope, idempotency_key=f"c:{scope}") is not None
+        # the journal-retry case: same key is a no-op
+        assert store.compact_tree(scope, idempotency_key=f"c:{scope}") is None
+    want = store.state_digest()
+    n_records = len(read_journal(os.path.join(root, JOURNAL_NAME)))
+    store.close()
+
+    # compaction rewrote placement + arenas (persistent state) — pure replay
+    # must land on the exact post-compaction digest
+    rec = DurableMemForest.open(root)
+    assert rec.ops_replayed == n_records
+    assert rec.state_digest() == want
+    for t in rec.forest.trees.values():
+        t.check_invariants()
+    rec.close()
+
+
+def test_snapshot_gc_honors_small_keep_counts(tmp_path, wl):
+    for keep in (0, 1):
+        root = str(tmp_path / f"keep{keep}")
+        store = DurableMemForest(MemForestSystem(MemForestConfig()), root,
+                                 keep_snapshots=keep)
+        for i in range(3):
+            store.ingest_batch(wl.sessions[i:i + 1], idempotency_key=f"i{i}")
+            store.checkpoint()
+        snaps = [n for n in os.listdir(root) if n.startswith("snapshot_")]
+        # keep=0 used to slice snaps[:-0] == [] and GC nothing; the
+        # LATEST-pointed snapshot itself is always retained
+        assert len(snaps) == max(keep, 1)
+        store.close()
+
+
 def test_reopen_is_stable_fixed_point(tmp_path, wl, merge_wl):
     """open(); close(); open() — recovery of a recovered store is a no-op
     state-wise (replay respects applied keys and the snapshot watermark)."""
@@ -276,6 +374,32 @@ def test_crash_sweep_every_durability_boundary(tmp_path, wl, merge_wl):
         assert store.state_digest() == want, \
             f"state diverged after crash at event #{k} ({probe.trace[k - 1]})"
     assert fired == probe.events            # every kill point actually fired
+
+
+def test_crash_sweep_journaled_compaction(tmp_path, wl, merge_wl):
+    """Kill the process at every durability boundary in the compaction
+    window: recovery must replay the journaled compact ops and reconverge
+    on the post-compaction digest (compaction rewrites placement rows and
+    arenas, which the digest counts as persistent state)."""
+    base = _plan(wl, merge_wl)
+    ops = base[:3] + [("compact", "client:c0", None)] + base[3:]
+    want = _run_uninterrupted(str(tmp_path / "ref"), ops,
+                              snapshot_every=2).state_digest()
+
+    probe = CrashInjector(None)
+    _run_uninterrupted(str(tmp_path / "probe"), ops, snapshot_every=2,
+                       crash=probe)
+    n_compacts = probe.trace.count("submit:compact_tree")
+    assert n_compacts > 0                       # the compaction actually fired
+    # sweep only the compaction window (its submit/append/apply ticks plus
+    # any snapshot the auto-checkpoint interleaves) to bound runtime
+    lo = probe.trace.index("submit:compact_tree")
+    hi = min(lo + 3 * n_compacts + 4, probe.events)
+    for k in range(lo + 1, hi + 1):
+        root = str(tmp_path / f"crash_{k:02d}")
+        store, _ = _run_with_crash_then_recover(root, ops, k)
+        assert store.state_digest() == want, \
+            f"state diverged after crash at event #{k} ({probe.trace[k - 1]})"
 
 
 @settings(max_examples=4, deadline=None)
@@ -355,6 +479,31 @@ def test_plane_compaction_reclaims_tombstoned_slots(wl):
         t.check_invariants()
     for r in mf.query_batch(wl.queries):    # compacted forest still serves
         assert r.answer is not None
+
+
+def test_plane_compaction_rides_durable_journal(tmp_path, wl):
+    """A plane built with durable= routes compactions through the journal,
+    so a crash right after the drain recovers the compacted state."""
+    root = str(tmp_path / "store")
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root)
+    store.ingest_batch(wl.sessions, idempotency_key="i")
+    for s in wl.sessions[:4]:
+        store.delete_session(s.session_id, idempotency_key=f"d:{s.session_id}")
+    plane = MaintenancePlane(store.forest, compact_min_dead_fraction=0.01,
+                             durable=store)
+    queued = plane.schedule_compaction()
+    assert queued > 0
+    journal_before = len(read_journal(os.path.join(root, JOURNAL_NAME)))
+    plane.drain()
+    assert plane.compactions_done == queued
+    assert len(read_journal(os.path.join(root, JOURNAL_NAME))) == \
+        journal_before + queued                  # each compaction journaled
+    want = store.state_digest()
+    store.close()
+
+    rec = DurableMemForest.open(root)
+    assert rec.state_digest() == want
+    rec.close()
 
 
 def test_plane_background_thread_mode(wl):
