@@ -10,26 +10,37 @@ launches per session, not model FLOPs.
 
 CSV: ingest_batch_B<k>,us_per_session,
      "sess_per_s=..;speedup_vs_b1=..;enc_calls=..;flush_calls=.."
+
+``--devices N`` switches to the multi-device serve sweep instead: forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before any jax import
+(which is why the jax-touching imports live inside the functions), then
+reports batched-ingest sessions/sec per mesh size in {1, 2, 4} (capped at
+N), with sharded flush refresh batches riding the mesh. Host-simulated
+devices share one CPU — this measures sharding overhead, not real scaling.
+
+CSV: ingest_devices_<c>,us_per_session,"devices=..;sess_per_s=.."
 """
 from __future__ import annotations
 
 import time
 from typing import List
 
-from benchmarks.common import default_workload, fresh_memforest, emit
-
 BATCH_SIZES = (1, 4, 16, 64)
+DEVICE_SWEEP = (1, 2, 4)
 NUM_SESSIONS = 256
 REPEATS = 3
 
 
-def _sessions() -> List:
-    wl = default_workload(num_entities=16, num_sessions=NUM_SESSIONS,
+def _sessions(n: int = NUM_SESSIONS) -> List:
+    from benchmarks.common import default_workload
+
+    wl = default_workload(num_entities=16, num_sessions=n,
                           transitions_per_entity=10, num_queries=0, seed=3)
-    return wl.sessions[:NUM_SESSIONS]
+    return wl.sessions[:n]
 
 
 def _measure(sessions, batch: int, ingest) -> dict:
+    from benchmarks.common import fresh_memforest
     """Shared protocol for every row: one untimed warm pass on a throwaway
     system compiles every jit shape bucket this config touches (the jit
     caches are process-global); then fresh systems are timed REPEATS times
@@ -53,7 +64,53 @@ def _ingest_batched(sessions, batch: int) -> dict:
     return _measure(sessions, batch, lambda s, chunk: s.ingest_batch(chunk))
 
 
-def run() -> None:
+def _device_sweep(max_devices: int) -> None:
+    """Batched ingest throughput per serve-mesh size: a fresh system per
+    count with the mesh attached before the first session, so the flush's
+    sharded tree_refresh path is what gets timed."""
+    import jax
+
+    from benchmarks.common import emit, fresh_memforest
+    from repro.launch.mesh import make_data_mesh
+
+    avail = len(jax.devices())
+    counts = [c for c in DEVICE_SWEEP if c <= min(max_devices, avail)]
+    sessions = _sessions(64)
+    batch = 16
+    for c in counts:
+        mesh = make_data_mesh(c) if c > 1 else None
+        got = mesh.devices.size if mesh is not None else 1
+
+        def ingest(s, chunk):
+            s.ingest_batch(chunk)
+
+        def fresh():
+            mf = fresh_memforest()
+            mf.set_mesh(mesh)
+            return mf
+
+        warm = fresh()
+        for i in range(0, len(sessions), batch):
+            ingest(warm, sessions[i:i + batch])
+        wall = float("inf")
+        for _ in range(REPEATS):
+            sys_ = fresh()
+            t0 = time.perf_counter()
+            for i in range(0, len(sessions), batch):
+                ingest(sys_, sessions[i:i + batch])
+            wall = min(wall, time.perf_counter() - t0)
+        n = len(sessions)
+        emit(f"ingest_devices_{c}", wall / n * 1e6,
+             f"devices={got};sess_per_s={n / wall:.1f}")
+
+
+def run(devices: int = 0) -> None:
+    if devices > 1:
+        _device_sweep(devices)
+        return
+
+    from benchmarks.common import emit
+
     sessions = _sessions()
 
     # reference: the classic sequential ingest loop (same protocol)
@@ -77,4 +134,16 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="multi-device serve sweep on N simulated host "
+                         "devices (mesh sizes 1/2/4)")
+    args = ap.parse_args()
+    if args.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+    run(devices=args.devices)

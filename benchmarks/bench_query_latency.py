@@ -10,6 +10,14 @@ CSV: query_<system>,us_per_query,"retrieval_us=..;answer_us=..;acc=.."
 ``--json PATH`` additionally writes the sweep rows as a JSON document
 (BENCH_query.json in CI) so the perf trajectory is tracked across PRs;
 ``--small`` shrinks the workload for smoke runs.
+
+``--devices N`` switches to the multi-device serve sweep instead: forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (BEFORE any jax
+import — which is why every jax-touching import in this module lives inside
+``run``), then reports ingest sessions/sec and query-batch qps per mesh size
+in {1, 2, 4} (capped at N), with an exact answer-parity check against the
+single-device rows (BENCH_shard.json in CI). Host-simulated devices share
+one CPU, so this measures sharding overhead/parity, not real scaling.
 """
 from __future__ import annotations
 
@@ -17,10 +25,9 @@ import json
 import time
 from typing import List, Optional
 
-from benchmarks.common import build_systems, default_workload, emit, fresh_memforest
-
 SWEEP_BATCHES = (1, 8, 32, 64)
 SWEEP_MODE = "llm+planner"          # the paper's default operating point
+DEVICE_SWEEP = (1, 2, 4)
 REPEATS = 3
 
 
@@ -41,6 +48,8 @@ def _accuracy(answers, queries) -> float:
 def _batch_sweep(mf, queries, json_rows: Optional[list]) -> None:
     """Per-query retrieve() loop vs query_batch at each B — identical
     answers required (parity), throughput reported as queries/sec."""
+    from benchmarks.common import emit
+
     n = len(queries)
     # warm every jit shape bucket both paths touch
     mf.query(queries[0], mode=SWEEP_MODE)
@@ -82,7 +91,82 @@ def _batch_sweep(mf, queries, json_rows: Optional[list]) -> None:
                               "parity": parity, "acc": acc})
 
 
-def run(small: bool = False, json_path: Optional[str] = None) -> None:
+def _device_sweep(max_devices: int, small: bool,
+                  json_path: Optional[str]) -> None:
+    """Multi-device serve sweep: fresh system per mesh size, mesh attached
+    BEFORE ingest (sharded flush included), ingest sessions/sec + B=64
+    query_batch qps per device count, exact parity vs the 1-device row."""
+    import jax
+
+    from benchmarks.common import default_workload, emit, fresh_memforest
+    from repro.launch.mesh import make_data_mesh
+
+    avail = len(jax.devices())
+    counts = [c for c in DEVICE_SWEEP if c <= min(max_devices, avail)]
+    if small:
+        wl = default_workload(num_entities=4, num_sessions=8,
+                              transitions_per_entity=3, num_queries=64)
+    else:
+        wl = default_workload(num_entities=8, num_sessions=14,
+                              transitions_per_entity=4, num_queries=128,
+                              seed=2)
+    B = 64
+    nq = len(wl.queries)
+    rows: list = []
+    base_answers: Optional[List[str]] = None
+    for c in counts:
+        mesh = make_data_mesh(c) if c > 1 else None
+        got = mesh.devices.size if mesh is not None else 1
+
+        def build():
+            mf = fresh_memforest()
+            mf.set_mesh(mesh)
+            for s in wl.sessions:
+                mf.ingest_session(s)
+            return mf
+
+        mf = build()                       # warm pass (jit compile)
+        ingest_wall = _best_of(build, REPEATS)
+        mf.query_batch(wl.queries[:B], mode=SWEEP_MODE)   # warm query path
+
+        def run_queries():
+            answers: List[str] = []
+            for i in range(0, nq, B):
+                answers.extend(r.answer for r in mf.query_batch(
+                    wl.queries[i:i + B], mode=SWEEP_MODE))
+            return answers
+        answers = run_queries()
+        wall = _best_of(run_queries)
+        if base_answers is None:
+            base_answers = answers
+        parity = sum(int(a == b) for a, b in zip(answers, base_answers)) / nq
+        sess_per_s = len(wl.sessions) / ingest_wall
+        qps = nq / wall
+        emit(f"query_devices_{c}", wall / nq * 1e6,
+             f"devices={got};qps={qps:.1f};ingest_sess_per_s={sess_per_s:.1f};"
+             f"parity={parity:.3f}")
+        rows.append({"name": f"query_devices_{c}", "devices": got,
+                     "qps": qps, "us_per_query": wall / nq * 1e6,
+                     "ingest_sess_per_s": sess_per_s, "parity": parity})
+        assert parity == 1.0, f"devices={c}: answers diverged from 1-device"
+    if json_path:
+        doc = {"bench": "query_latency_devices", "mode": SWEEP_MODE,
+               "num_queries": nq, "small": small, "batch": B,
+               "available_devices": avail, "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {json_path}", flush=True)
+
+
+def run(small: bool = False, json_path: Optional[str] = None,
+        devices: int = 0) -> None:
+    if devices > 1:
+        _device_sweep(devices, small, json_path)
+        return
+
+    from benchmarks.common import (build_systems, default_workload, emit,
+                                   fresh_memforest)
+
     if small:
         wl = default_workload(num_entities=4, num_sessions=8,
                               transitions_per_entity=3, num_queries=48)
@@ -142,11 +226,21 @@ def run(small: bool = False, json_path: Optional[str] = None) -> None:
 
 if __name__ == "__main__":
     import argparse
+    import os
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", action="store_true",
                     help="smoke-scale workload (CI)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the batch-sweep rows as JSON")
+                    help="write the sweep rows as JSON")
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="multi-device serve sweep on N simulated host "
+                         "devices (mesh sizes 1/2/4, parity-checked)")
     args = ap.parse_args()
+    if args.devices > 1:
+        # must land before the first jax import (run() imports lazily)
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
     print("name,us_per_call,derived")
-    run(small=args.small, json_path=args.json)
+    run(small=args.small, json_path=args.json, devices=args.devices)

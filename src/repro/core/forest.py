@@ -23,7 +23,7 @@ import numpy as np
 from repro.config import MemForestConfig
 from repro.core.memtree import TreeArena
 from repro.core.types import CanonicalFact, DialogueCell
-from repro.kernels import ops
+from repro.kernels import ops, shard_ops
 
 
 class Forest:
@@ -52,21 +52,29 @@ class Forest:
         # device-resident L2-normalized index caches (read path): the fact
         # and root matrices live on device between queries, invalidated
         # incrementally — appends sync [synced, n), in-place edits land in a
-        # dirty-row set, capacity growth forces a full re-upload. topk_sim
-        # then runs with normalize=False: no per-query host->device transfer
-        # and no O(N*D) re-normalization.
+        # dirty-row set, capacity growth grows the device buffer in place
+        # (geometric, no re-upload). topk_sim then runs with normalize=False:
+        # no per-query host->device transfer and no O(N*D) re-normalization.
         self._fact_dev = None
         self._fact_dev_rows = 0
         self._fact_dev_dirty: Set[int] = set()
         self._root_dev = None
         self._root_dev_rows = 0
         self._root_dev_dirty: Set[int] = set()
+        # multi-device serve: when a mesh is attached (set_mesh), the fact
+        # index cache is row-sharded round-robin over the mesh's data axis
+        # and read through kernels/shard_ops; the root index is replicated.
+        # mesh=None is the single-device fast path (byte-identical to the
+        # pre-mesh code).
+        self.mesh = None
+        self.mesh_axis = "data"
         # counters (benchmarks read these)
         self.summary_refreshes = 0
         self.flush_levels = 0
         self.flush_calls = 0
-        self.index_uploads = 0          # full device re-uploads
+        self.index_uploads = 0          # full device (re-)uploads
         self.index_row_updates = 0      # incremental scatter updates
+        self.index_grows = 0            # device-side capacity grows
 
     # ------------------------------------------------------------------
     # persistent-state writes
@@ -83,7 +91,8 @@ class Forest:
                 self._root_matrix = np.concatenate(
                     [self._root_matrix, np.zeros((grow, self.config.embed_dim), np.float32)]
                 )
-                self._root_dev = None   # capacity changed: full re-upload
+                # capacity growth: _sync_device grows the device buffer in
+                # place (no full re-upload)
         return t
 
     def add_fact(self, fact: CanonicalFact) -> int:
@@ -95,7 +104,7 @@ class Forest:
             self.fact_emb = np.concatenate(
                 [self.fact_emb, np.zeros((grow, self.config.embed_dim), np.float32)]
             )
-            self._fact_dev = None       # capacity changed: full re-upload
+            # capacity growth: device buffer grows in place at next sync
         self.fact_emb[fact.fact_id] = fact.emb
         sid = fact.sources[0][0] if fact.sources else ""
         self.session_registry.setdefault(sid, {"facts": [], "cells": []})["facts"].append(fact.fact_id)
@@ -187,10 +196,14 @@ class Forest:
     def _refresh_batch(self, batch: List[Tuple[TreeArena, int]], K: int, dim: int) -> int:
         P = len(batch)
         # pad the parent dim to a power-of-two bucket: the jit-compile set for
-        # the refresh kernel stays O(log P_max) across the system's lifetime
+        # the refresh kernel stays O(log P_max) across the system's lifetime.
+        # With a mesh attached the bucket additionally pads to a shard
+        # multiple so the cross-tree batch splits evenly over the data axis.
         cap = 1
         while cap < P:
             cap *= 2
+        if self.mesh is not None:
+            cap = shard_ops.pad_rows(cap, self._shards())
         child_emb = np.zeros((cap, K, dim), np.float32)
         mask = np.zeros((cap, K), np.float32)
         for i, (tree, n) in enumerate(batch):
@@ -198,9 +211,14 @@ class Forest:
             for j, c in enumerate(kids):
                 child_emb[i, j] = tree.emb[c]
                 mask[i, j] = 1.0
-        out = np.asarray(ops.tree_refresh(
-            jnp.asarray(child_emb), jnp.asarray(mask), impl=self.kernel_impl
-        ))
+        if self.mesh is not None:
+            out = np.asarray(shard_ops.sharded_tree_refresh(
+                child_emb, mask, mesh=self.mesh, axis=self.mesh_axis,
+                impl=self.kernel_impl))
+        else:
+            out = np.asarray(ops.tree_refresh(
+                jnp.asarray(child_emb), jnp.asarray(mask), impl=self.kernel_impl
+            ))
         for i, (tree, n) in enumerate(batch):
             tree.emb[n] = out[i]
             tree.refresh_text(n)
@@ -242,31 +260,89 @@ class Forest:
         self._root_dev_dirty.add(tree.tree_id)
 
     # ------------------------------------------------------------------
+    # multi-device serve (mesh-sharded index + flush batches)
+    # ------------------------------------------------------------------
+    def set_mesh(self, mesh, axis: str = "data") -> None:
+        """Attach a serve mesh: the fact index shards round-robin over the
+        mesh's ``axis`` (kernels/shard_ops layout), the root index
+        replicates, and flush/browse batches run shard-mapped. ``None`` (or
+        a mesh whose data axis is width 1) restores the single-device fast
+        path. Resets the device caches so the next sync uploads with the new
+        layout; persistent state is untouched, so results are identical
+        across any mesh change (tests/test_sharded_serve.py)."""
+        if mesh is not None and shard_ops.mesh_shards(mesh, axis) <= 1:
+            mesh = None
+        self.mesh = mesh
+        self.mesh_axis = axis
+        self._fact_dev = None
+        self._fact_dev_rows = 0
+        self._fact_dev_dirty.clear()
+        self._root_dev = None
+        self._root_dev_rows = 0
+        self._root_dev_dirty.clear()
+
+    def _shards(self) -> int:
+        return shard_ops.mesh_shards(self.mesh, self.mesh_axis)
+
+    # ------------------------------------------------------------------
     # device-resident normalized index views (retrieval hot path)
     # ------------------------------------------------------------------
     def _sync_device(self, host: np.ndarray, n: int, cached, synced_rows: int,
-                     dirty: Set[int]):
+                     dirty: Set[int], *, sharded: bool = False):
         """Bring one device index cache up to date with its host matrix.
-        Returns (device array, new synced row count)."""
-        if cached is None or cached.shape != host.shape:
+        Returns (device array, new synced row count).
+
+        Capacity growth is geometric and device-side: when the host matrix
+        outgrows the cached buffer, the buffer gains zero rows IN PLACE
+        (ops.grow_rows / shard_ops.grow_sharded) and only new/dirty rows are
+        scattered — steady ingest never re-uploads or re-normalizes the
+        whole index. Full uploads happen only on first use, dtype/dim
+        change, shrink (snapshot restore), or mesh change.
+
+        ``sharded=True`` (the fact index) uses the round-robin sharded
+        layout when a mesh is attached; the root index stays replicated."""
+        mesh = self.mesh if sharded else None
+        S = shard_ops.mesh_shards(mesh, self.mesh_axis)
+        cap = shard_ops.pad_rows(host.shape[0], S)
+        if cached is not None and (cached.shape[1] != host.shape[1]
+                                   or cached.shape[0] > cap):
+            cached = None
+        if cached is None:
             self.index_uploads += 1
             dirty.clear()
+            if mesh is not None:
+                return shard_ops.upload_sharded(host, cap, mesh,
+                                                self.mesh_axis), n
+            if self.mesh is not None:
+                return shard_ops.upload_replicated(host, self.mesh), n
             return ops.normalize_rows(jnp.asarray(host)), n
+        if cached.shape[0] < cap:
+            self.index_grows += 1
+            if mesh is not None:
+                cached = shard_ops.grow_sharded(cached, cap, mesh,
+                                                self.mesh_axis)
+            else:
+                cached = ops.grow_rows(cached, cap - cached.shape[0])
         rows = sorted(set(r for r in dirty if r < n)
                       | set(range(synced_rows, n)))
         dirty.clear()
         if not rows:
             return cached, n
         # bucket the update size: the jit-compile set for the scatter stays
-        # O(log U_max); padding entries carry an out-of-bounds index (drop)
-        cap = 1
-        while cap < len(rows):
-            cap *= 2
-        idx = np.full(cap, host.shape[0], np.int32)
+        # O(log U_max); padding entries carry a drop sentinel (out-of-bounds
+        # index single-device, -1 in the sharded layout)
+        ucap = 1
+        while ucap < len(rows):
+            ucap *= 2
+        sentinel = -1 if mesh is not None else host.shape[0]
+        idx = np.full(ucap, sentinel, np.int32)
         idx[: len(rows)] = rows
-        upd = np.zeros((cap, host.shape[1]), np.float32)
+        upd = np.zeros((ucap, host.shape[1]), np.float32)
         upd[: len(rows)] = host[rows]
         self.index_row_updates += 1
+        if mesh is not None:
+            return shard_ops.sharded_scatter_rows(
+                cached, idx, upd, mesh=mesh, axis=self.mesh_axis), n
         return ops.scatter_normalize_rows(
             cached, jnp.asarray(idx), jnp.asarray(upd)), n
 
@@ -274,11 +350,15 @@ class Forest:
         """(device-resident L2-normalized fact matrix, valid count). Use with
         ``topk_sim(..., normalize=False)``; rows are normalized with the same
         formula the kernel applies, so scores match the host path bit-for-
-        bit. Dead facts' rows are zero vectors (score 0 after masking)."""
+        bit. Dead facts' rows are zero vectors (score 0 after masking).
+
+        With a mesh attached the matrix is round-robin row-sharded and must
+        be scanned through ``shard_ops.sharded_topk_sim`` (which returns
+        global row ids); the Retriever dispatches on ``forest.mesh``."""
         n = len(self.facts)
         self._fact_dev, self._fact_dev_rows = self._sync_device(
             self.fact_emb, n, self._fact_dev, self._fact_dev_rows,
-            self._fact_dev_dirty)
+            self._fact_dev_dirty, sharded=True)
         return self._fact_dev, n
 
     def root_index_device(self):

@@ -153,6 +153,17 @@ class MemForestSystem:
         return out
 
     # ------------------------------------------------------------------
+    # multi-device serve
+    # ------------------------------------------------------------------
+    def set_mesh(self, mesh, axis: str = "data") -> None:
+        """Shard the serve path across ``mesh``'s data axis: the fact index
+        (rows round-robin, roots replicated), the browse-lane frontier, and
+        the flush's cross-tree refresh batches. ``None`` restores the
+        single-device fast path. Results are identical either way —
+        placement is the only thing that changes (kernels/shard_ops)."""
+        self.forest.set_mesh(mesh, axis)
+
+    # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
     def merge_from(self, other: "MemForestSystem", *,

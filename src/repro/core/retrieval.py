@@ -28,6 +28,12 @@ numpy over the packed frontier (with per-node content-word sets memoized on
 the TreeArena). ``retrieve`` and ``retrieve_batch`` share this engine, so
 batched results are identical to the single-query path by construction.
 
+Multi-device serve: when the Forest carries a mesh (``Forest.set_mesh``),
+the fact-index scan runs shard-local + cross-device candidate merge
+(``shard_ops.sharded_topk_sim``) and the packed browse frontier shards over
+the same data axis — both exactly result-identical to mesh=None thanks to
+row-local math and the shared deterministic top-k tie-break.
+
 The answerer is SHARED across all memory systems benchmarked (baselines
 included): given retrieved canonical facts it applies query semantics
 (current/before/when/first). Accuracy therefore measures retrieval quality —
@@ -47,7 +53,7 @@ from repro.core.forest import Forest
 from repro.core.memtree import TreeArena, content_words as _content_words
 from repro.core.types import CanonicalFact, Query, QueryResult
 from repro.data import templates as T
-from repro.kernels import ops
+from repro.kernels import ops, shard_ops
 
 _BEFORE_RE = re.compile(r"before (?:moving to |becoming |project )?([A-Za-z ]+?)\?")
 _WHEN_RE = re.compile(r"^When did")
@@ -149,10 +155,23 @@ class Retriever:
 
         flat_idx = None
         if n_facts:
-            _, flat_idx = ops.topk_sim(
-                qd, fact_dev, min(max(topk, cfg.fact_recall_topk), n_facts),
-                normalize=False, num_valid=n_facts, impl=self.forest.kernel_impl,
-            )
+            k_facts = min(max(topk, cfg.fact_recall_topk), n_facts)
+            if self.forest.mesh is not None:
+                # mesh-sharded scan: shard-local top-k over the round-robin
+                # sharded fact index + cross-device candidate merge; exactly
+                # result-identical to the single-device path (shared
+                # deterministic tie-break: score desc, row id asc)
+                _, flat_idx = shard_ops.sharded_topk_sim(
+                    qd, fact_dev, k_facts, mesh=self.forest.mesh,
+                    axis=self.forest.mesh_axis, num_valid=n_facts,
+                    impl=self.forest.kernel_impl,
+                )
+            else:
+                _, flat_idx = ops.topk_sim(
+                    qd, fact_dev, k_facts,
+                    normalize=False, num_valid=n_facts,
+                    impl=self.forest.kernel_impl,
+                )
             flat_idx = np.asarray(flat_idx)
         root_vals = root_idx = None
         if n_trees:
@@ -332,6 +351,12 @@ class Retriever:
         cap = 8
         while cap < F:
             cap *= 2
+        mesh = self.forest.mesh
+        if mesh is not None:
+            # lane padding to a shard multiple: the packed frontier splits
+            # evenly over the mesh's data axis (padded rows are masked)
+            cap = shard_ops.pad_rows(
+                cap, shard_ops.mesh_shards(mesh, self.forest.mesh_axis))
         dim = self.config.embed_dim
         child = np.zeros((cap, k_pad, dim), np.float32)
         mask = np.zeros((cap, k_pad), np.float32)
@@ -348,10 +373,16 @@ class Retriever:
             child[rows] = emb
             mask[rows] = m
         self.browse_launches += 1
-        sims = np.asarray(ops.browse_scores(
-            jnp.asarray(child), jnp.asarray(qm), jnp.asarray(mask),
-            impl=self.forest.kernel_impl,
-        ))
+        if mesh is not None:
+            sims = np.asarray(shard_ops.sharded_browse_scores(
+                child, qm, mask, mesh=mesh, axis=self.forest.mesh_axis,
+                impl=self.forest.kernel_impl,
+            ))
+        else:
+            sims = np.asarray(ops.browse_scores(
+                jnp.asarray(child), jnp.asarray(qm), jnp.asarray(mask),
+                impl=self.forest.kernel_impl,
+            ))
         return [sims[i, : len(lane.tree.children[n])]
                 for i, (lane, n) in enumerate(frontier)]
 

@@ -6,6 +6,12 @@
   * ``pallas``           — the Pallas TPU kernel (TARGET hardware).
   * ``pallas_interpret`` — the same kernel body executed in interpret mode
                            (CPU correctness validation; used by tests).
+
+Every dispatcher here is single-device; the mesh-sharded twins (shard-local
+launch of the SAME kernels + cheap cross-device merges) live in
+``repro.kernels.shard_ops`` and are selected by the Forest/Retriever when a
+serve mesh is attached (``Forest.set_mesh``). mesh=None callers never touch
+that module — the single-device path below stays byte-identical.
 """
 from __future__ import annotations
 
@@ -106,6 +112,18 @@ def scatter_normalize_rows(arr, idx, rows):
     rf = rows.astype(jnp.float32)
     rf = rf / (jnp.linalg.norm(rf, axis=-1, keepdims=True) + 1e-6)
     return arr.at[idx].set(rf, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("add",))
+def grow_rows(arr, add):
+    """Geometric device-cache growth (single-device path): append ``add``
+    zero rows to a cached index matrix ON DEVICE. Capacity growth used to
+    invalidate the whole cache and re-upload + re-normalize every row from
+    host; this keeps the existing normalized rows in place so only new/dirty
+    rows transfer (Forest._sync_device). Not donated, for the same
+    view-validity reason as scatter_normalize_rows."""
+    return jnp.concatenate(
+        [arr, jnp.zeros((add, arr.shape[1]), arr.dtype)])
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

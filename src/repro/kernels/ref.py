@@ -100,8 +100,16 @@ def topk_sim_ref(
     if num_valid is not None:
         cols = jnp.arange(scores.shape[1])[None, :]
         scores = jnp.where(cols < num_valid, scores, -1e30)
-    vals, idx = jax.lax.top_k(scores, k)
-    idx = jnp.where(vals > -1e29, idx, -1)
+    # deterministic selection ordered by (score desc, key index asc) — the
+    # same tie-break the Pallas kernel's first-occurrence argmax applies and
+    # the cross-shard candidate merge (topk_sim.merge_topk) relies on for
+    # exact single-device/multi-device parity. lax.top_k's tie order is
+    # backend-defined, so the lexicographic two-key sort is explicit here.
+    cols = jnp.broadcast_to(
+        jnp.arange(scores.shape[1], dtype=jnp.int32)[None, :], scores.shape)
+    sneg, sidx = jax.lax.sort((-scores, cols), dimension=-1, num_keys=2)
+    vals = -sneg[:, :k]
+    idx = jnp.where(vals > -1e29, sidx[:, :k], -1)
     return vals, idx.astype(jnp.int32)
 
 

@@ -10,6 +10,14 @@ Grid: (num_q_blocks, num_key_blocks), key blocks innermost/sequential.
 Selection: per key tile, the candidate pool is [running top-k | tile scores]
 (block_q, K + block_kv); K iterations of max+mask extract the new top-k.
 K <= 32 keeps this cheap relative to the (block_q x D x block_kv) MXU matmul.
+
+Tie-break contract: results are ordered by (score desc, key index asc). The
+argmax-based selection realizes this for free — within the candidate pool the
+running top-k (lower global indices, ascending among equal scores) precedes
+the tile columns (ascending), and argmax returns the FIRST maximum. The
+reference oracle and the cross-shard candidate merge (:func:`merge_topk`)
+implement the same order explicitly, so single-device and mesh-sharded
+retrieval are exactly result-identical, not tie-lucky.
 """
 from __future__ import annotations
 
@@ -75,6 +83,23 @@ def _topk_kernel(
     def _finish():
         vals_ref[...] = tv_ref[...]
         idx_ref[...] = jnp.where(tv_ref[...] > NEG_INF / 2, ti_ref[...], -1)
+
+
+def merge_topk(vals: jax.Array, idx: jax.Array, k: int):
+    """Deterministic top-k over a candidate pool: (Q, C) scores + global key
+    indices -> (Q, k) ordered by (score desc, index asc). Dead candidates
+    carry vals == NEG_INF / idx == -1 and sort last; surviving dead slots are
+    re-masked to idx -1 (matches the kernel/oracle contract).
+
+    This is the cross-device reduction of the mesh-sharded scan
+    (kernels/shard_ops.py): each shard contributes its local top-k as
+    (score, global row) candidates and the merge is a cheap (Q, S*k)
+    two-key sort — never the full (Q, N) score matrix."""
+    neg = -vals
+    sneg, sidx = jax.lax.sort((neg, idx), dimension=-1, num_keys=2)
+    out_v = -sneg[..., :k]
+    out_i = sidx[..., :k]
+    return out_v, jnp.where(out_v > NEG_INF / 2, out_i, -1)
 
 
 def _pad_to(x: jax.Array, n: int, axis: int = 0) -> jax.Array:

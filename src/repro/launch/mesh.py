@@ -47,6 +47,23 @@ def activate_mesh(mesh: Mesh):
     return mesh
 
 
+def make_data_mesh(devices: int = 0, axis: str = "data") -> Optional[Mesh]:
+    """1-D serve mesh over the first ``devices`` local devices (0 = all).
+    Returns None when fewer than 2 devices are available/requested — callers
+    treat None as the single-device fast path (Forest.set_mesh(None)).
+
+    Host-simulated multi-device testing: set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE the first
+    jax import, then ``make_data_mesh(N)``."""
+    import numpy as np
+
+    avail = jax.devices()
+    n = len(avail) if devices <= 0 else min(devices, len(avail))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(avail[:n]), (axis,))
+
+
 def make_host_mesh(model_parallel: int = 1) -> Optional[Mesh]:
     """Largest mesh expressible on the actually-available devices."""
     n = len(jax.devices())

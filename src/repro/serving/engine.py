@@ -23,6 +23,14 @@ share the encoder forward, the fused topk_sim index scans, and the
 level-synchronous browse launches (core/retrieval.py). Decode, ingest, and
 query traffic all ride the same continuous-batching loop.
 
+Multi-device serve: pass ``sharded=ShardedServeConfig(devices=N)`` to shard
+the memory system's serve path over a 1-D data mesh
+(``launch.mesh.make_data_mesh`` + ``MemForestSystem.set_mesh``): fact-index
+rows round-robin across devices with shard-local top-k + candidate merge,
+browse lanes and flush refresh batches data-parallel, roots replicated.
+Results are exactly identical to single-device serve (kernels/shard_ops.py);
+with <2 devices the config degrades to the mesh=None fast path.
+
 Maintenance lane: when built with a ``maintenance`` plane
 (core/maintenance_plane.py), ingest drains stop flushing inline
 (``defer_flush=True``) and the engine instead runs a bounded slice of
@@ -92,12 +100,21 @@ class PrefixCache:
         self.entries[(key, sig)] = (logits, cache)
 
 
+@dataclass(frozen=True)
+class ShardedServeConfig:
+    """Multi-device serve knobs. ``devices=0`` means all local devices;
+    anything that resolves to <2 devices falls back to single-device."""
+    devices: int = 0
+    axis: str = "data"
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int = 2,
                  memory=None, max_ingest_batch: int = 16,
                  max_query_batch: int = 32,
-                 maintenance=None, maintenance_budget: int = 1):
+                 maintenance=None, maintenance_budget: int = 1,
+                 sharded: Optional[ShardedServeConfig] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -117,6 +134,14 @@ class ServeEngine:
         # everything queued between two engine steps drains as ONE
         # MemForestSystem.ingest_batch call (cross-tenant write batching)
         self.memory = memory
+        # multi-device serve: attach a data mesh to the memory system so the
+        # ingest/query drains below run the sharded serve path transparently
+        self.serve_mesh = None
+        if sharded is not None and memory is not None:
+            from repro.launch.mesh import make_data_mesh
+
+            self.serve_mesh = make_data_mesh(sharded.devices, sharded.axis)
+            memory.set_mesh(self.serve_mesh, sharded.axis)
         self.max_ingest_batch = max_ingest_batch
         self.ingest_queue: List = []
         self.ingest_batches = 0
@@ -367,6 +392,8 @@ class ServeEngine:
             "queries_served": self.queries_served,
             "mean_query_batch": self.queries_served / max(self.query_batches, 1),
             "maintenance_turns": self.maintenance_turns,
+            "serve_devices": (self.serve_mesh.devices.size
+                              if self.serve_mesh is not None else 1),
             **(self.maintenance.metrics() if self.maintenance is not None else {}),
         }
 

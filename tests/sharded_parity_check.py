@@ -1,0 +1,142 @@
+"""Multi-device serve parity checker (NOT a pytest module — run as a script
+by tests/test_sharded_serve.py in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``, so the forced
+virtual devices never leak into the pytest process).
+
+Checks, for each requested mesh size, EXACT parity against mesh=None:
+  * flush parity — ingesting under a mesh produces bitwise-identical tree
+    summary embeddings and identical node texts (the sharded tree_refresh
+    path is row-local math);
+  * retrieval parity — ``query_batch`` answers + evidence and single
+    ``query`` answers match for all six browse modes (sharded topk_sim +
+    sharded browse lanes);
+  * growth parity — ingest-after-query grows the sharded device cache in
+    place (no re-upload) and results still match a fresh system;
+  * uneven shards — fact counts not divisible by the mesh size, and a tiny
+    workload with fewer facts than devices, both pad correctly.
+
+Exits 0 and prints "PARITY OK" on success; any mismatch raises.
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--meshes", default="2,4",
+                    help="comma-separated data-axis sizes to check")
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.meshes.split(",") if s]
+
+    import jax
+    import numpy as np
+
+    from repro.config import MemForestConfig
+    from repro.core.memforest import MemForestSystem
+    from repro.data.synthetic import make_workload
+    from repro.launch.mesh import make_data_mesh
+
+    assert len(jax.devices()) >= max(sizes), (
+        f"need {max(sizes)} devices, got {len(jax.devices())} — "
+        "run with XLA_FLAGS=--xla_force_host_platform_device_count=N")
+
+    MODES = ["flat", "root-only", "emb", "emb+planner", "llm", "llm+planner"]
+
+    def build(wl, mesh):
+        mf = MemForestSystem(MemForestConfig())
+        mf.set_mesh(mesh)
+        for s in wl.sessions:
+            mf.ingest_session(s)
+        return mf
+
+    def check_trees(base, other, tag):
+        assert set(base.forest.trees) == set(other.forest.trees), tag
+        for tid, tree in base.forest.trees.items():
+            t2 = other.forest.trees[tid]
+            n = tree._n
+            assert t2._n == n, (tag, tid)
+            assert np.array_equal(tree.emb[:n], t2.emb[:n]), (tag, tid)
+            assert tree.text == t2.text, (tag, tid)
+
+    def check_queries(base, other, queries, tag):
+        assert queries, f"{tag}: workload produced no queries"
+        for mode in MODES:
+            r0 = base.query_batch(queries, mode=mode)
+            r1 = other.query_batch(queries, mode=mode)
+            for a, b in zip(r0, r1):
+                assert a.answer == b.answer, (tag, mode, a.answer, b.answer)
+                assert a.evidence == b.evidence, (tag, mode)
+        a = base.query(queries[0])
+        b = other.query(queries[0])
+        assert a.answer == b.answer and a.evidence == b.evidence, tag
+
+    # -- main workload: enough facts that every shard holds many rows ------
+    wl = make_workload(num_entities=5, num_sessions=9,
+                       transitions_per_entity=3, num_queries=10, seed=11)
+    base = build(wl, None)
+    for S in sizes:
+        mesh = make_data_mesh(S)
+        assert mesh is not None and mesh.devices.size == S
+        mf = build(wl, mesh)
+        check_trees(base, mf, f"S={S}")
+        check_queries(base, mf, wl.queries, f"S={S}")
+        print(f"mesh={S}: flush + all-mode query parity OK")
+
+        # growth under mesh: query (build cache), ingest more, query again
+        wl2 = make_workload(num_entities=5, num_sessions=4,
+                            transitions_per_entity=2, num_queries=4, seed=12)
+        mf.query_batch(wl.queries)
+        up0, gr0 = mf.forest.index_uploads, mf.forest.index_grows
+        for s in wl2.sessions:
+            mf.ingest_session(s)
+        r = mf.query_batch(wl.queries)
+        assert mf.forest.index_uploads == up0, \
+            f"S={S}: capacity growth re-uploaded the sharded cache"
+        assert mf.forest.index_grows > gr0, f"S={S}: no sharded growth"
+        fresh = MemForestSystem(MemForestConfig())
+        for s in list(wl.sessions) + list(wl2.sessions):
+            fresh.ingest_session(s)
+        rf = fresh.query_batch(wl.queries)
+        for a, b in zip(r, rf):
+            assert a.answer == b.answer and a.evidence == b.evidence, f"S={S}"
+        print(f"mesh={S}: in-place sharded growth parity OK")
+
+    # -- uneven shards: fact count not divisible by the mesh size ----------
+    wl_odd = make_workload(num_entities=1, num_sessions=2,
+                           transitions_per_entity=2, num_queries=6, seed=6)
+    base_odd = build(wl_odd, None)
+    n_facts = len(base_odd.forest.facts)
+    assert any(n_facts % S for S in sizes), \
+        f"odd workload regressed: {n_facts} facts divides every mesh size"
+    for S in sizes:
+        mf = build(wl_odd, make_data_mesh(S))
+        check_queries(base_odd, mf, wl_odd.queries, f"odd S={S}")
+    print(f"uneven-shard parity OK ({n_facts} facts)")
+
+    # -- fewer valid rows than devices (emptiest shards own zero rows) -----
+    from repro.kernels import ops, shard_ops
+
+    S_max = max(sizes)
+    rng = np.random.default_rng(5)
+    tiny = rng.standard_normal((S_max - 1, 16)).astype(np.float32)
+    q = np.asarray(ops.normalize_rows(
+        rng.standard_normal((2, 16), dtype=np.float32)))
+    mesh = make_data_mesh(S_max)
+    cap = shard_ops.pad_rows(8, S_max)
+    sharded = shard_ops.upload_sharded(tiny, cap, mesh)
+    v1, i1 = shard_ops.sharded_topk_sim(
+        q, sharded, 4, mesh=mesh, num_valid=tiny.shape[0])
+    dense = ops.normalize_rows(
+        np.pad(tiny, ((0, cap - tiny.shape[0]), (0, 0))))
+    v0, i0 = ops.topk_sim(q, dense, 4, normalize=False,
+                          num_valid=tiny.shape[0])
+    assert np.array_equal(np.asarray(i0), np.asarray(i1)), (i0, i1)
+    assert np.allclose(np.asarray(v0), np.asarray(v1))
+    print(f"tiny-index parity OK ({tiny.shape[0]} rows on {S_max} devices)")
+
+    print("PARITY OK")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
