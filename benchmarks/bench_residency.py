@@ -1,0 +1,186 @@
+"""Tiered tenant residency under Zipfian traffic (core/residency.py).
+
+Sweeps tenant counts at {1, 8, 32}x the hot budget. For each factor the same
+Zipf-distributed query schedule runs twice against two managers over
+identical per-tenant corpora:
+
+  * ``tiered``  — hot_budget tenants resident, traffic-aware LRU eviction,
+    cold queries through the digest gate (escalate only above threshold);
+  * ``all_hot`` — budget = tenant count, so every tenant stays resident
+    (the no-eviction upper bound at equal hot-set size).
+
+Steady state: one full pass of the schedule warms both managers (LRU
+stabilizes on the Zipf head, jit shapes compile), then the timed pass
+reports qps and ``qps_vs_all_hot``. Residency counters (evictions /
+rehydrations / digest_answers / device bytes) are deltas over the timed
+pass and ride in BOTH emitters — the CSV ``derived`` column and the JSON
+rows (BENCH_residency.json in CI).
+
+A parity row runs every query against one tenant before demotion and after
+rehydration (escalation forced) — byte-identical answers required
+(parity=1.0, asserted): eviction must never cost fidelity.
+
+CSV: residency_<f>x,us_per_query,"qps=..;qps_vs_all_hot=..;evictions=..;.."
+     residency_parity,us_per_query,"parity=1.000;..."
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import List, Optional
+
+FACTORS = (1, 8, 32)
+HOT_BUDGET = 4
+ZIPF_S = 1.5                 # traffic skew: head tenants dominate
+DIGEST_THRESHOLD = 0.45      # cold tail mostly answers from the digest
+EVENT_BATCH = 4              # queries per traffic event (one drain's worth)
+
+
+def _tenant_wl(i: int, small: bool):
+    from repro.data.synthetic import make_workload
+
+    return make_workload(num_entities=2, num_sessions=2 if small else 3,
+                         transitions_per_entity=2 if small else 3,
+                         num_queries=6, seed=1000 + i)
+
+
+def _schedule(n_tenants: int, n_events: int, nq: int):
+    """Zipf-ranked tenant draw + rotating query pick, fixed seed — the
+    identical schedule drives the tiered and the all-hot manager."""
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    p = 1.0 / np.arange(1, n_tenants + 1, dtype=np.float64) ** ZIPF_S
+    p /= p.sum()
+    ranks = rng.choice(n_tenants, size=n_events, p=p)
+    return [(int(r), [(e * EVENT_BATCH + j) % nq for j in range(EVENT_BATCH)])
+            for e, r in enumerate(ranks)]
+
+
+def _build_manager(root: str, budget: int, threshold: float, wls) -> "object":
+    from repro.config import MemForestConfig
+    from repro.core.residency import ResidencyConfig, ResidencyManager
+
+    mgr = ResidencyManager(root, config=ResidencyConfig(
+        hot_budget=budget, digest_threshold=threshold),
+        mem_config=MemForestConfig())
+    for i, wl in enumerate(wls):
+        mgr.ingest(f"t{i:03d}", wl.sessions, idempotency_key=f"t{i:03d}:i0")
+    return mgr
+
+
+def _run_schedule(mgr, wls, sched) -> float:
+    t0 = time.perf_counter()
+    for rank, q_idx in sched:
+        qs = [wls[rank].queries[j] for j in q_idx]
+        mgr.query_batch(f"t{rank:03d}", qs)
+    return time.perf_counter() - t0
+
+
+def _factor_row(factor: int, small: bool, base: str) -> dict:
+    from benchmarks.common import emit
+
+    n_tenants = factor * HOT_BUDGET
+    n_events = 40 if small else 120
+    wls = [_tenant_wl(i, small) for i in range(n_tenants)]
+    sched = _schedule(n_tenants, n_events, len(wls[0].queries))
+    n_queries = n_events * EVENT_BATCH
+
+    tiered = _build_manager(os.path.join(base, f"tiered_{factor}x"),
+                            HOT_BUDGET, DIGEST_THRESHOLD, wls)
+    all_hot = _build_manager(os.path.join(base, f"allhot_{factor}x"),
+                             n_tenants, DIGEST_THRESHOLD, wls)
+
+    _run_schedule(tiered, wls, sched)       # warm: LRU settles on the head
+    _run_schedule(all_hot, wls, sched)
+    m0 = tiered.metrics()
+    wall = _run_schedule(tiered, wls, sched)
+    wall_hot = _run_schedule(all_hot, wls, sched)
+    m1 = tiered.metrics()
+
+    qps = n_queries / wall
+    qps_hot = n_queries / wall_hot
+    ratio = qps / qps_hot
+    delta = {k: m1[k] - m0[k] for k in
+             ("evictions", "rehydrations", "digest_answers",
+              "digest_escalations")}
+    row = {
+        "name": f"residency_{factor}x",
+        "tenants": n_tenants, "hot_budget": HOT_BUDGET,
+        "qps": qps, "qps_all_hot": qps_hot, "qps_vs_all_hot": ratio,
+        "us_per_query": wall / n_queries * 1e6,
+        "hot_tenants": m1["hot_tenants"],
+        "device_bytes": m1["device_bytes"],
+        "device_bytes_est": m1["device_bytes_est"],
+        "device_bytes_all_hot": all_hot.metrics()["device_bytes_est"],
+        "digest_bytes": m1["digest_bytes"],
+        **delta,
+    }
+    emit(f"residency_{factor}x", row["us_per_query"],
+         f"qps={qps:.1f};qps_vs_all_hot={ratio:.3f};"
+         f"hot_tenants={row['hot_tenants']};evictions={delta['evictions']};"
+         f"rehydrations={delta['rehydrations']};"
+         f"digest_answers={delta['digest_answers']};"
+         f"device_bytes_est={row['device_bytes_est']}")
+    tiered.close()
+    all_hot.close()
+    return row
+
+
+def _parity_row(small: bool, base: str) -> dict:
+    """Evict -> rehydrate fidelity: identical answers required. Escalation
+    is forced (threshold < 0) so the post-demotion pass runs on the
+    rehydrated store, not the digest."""
+    from benchmarks.common import emit
+
+    wl = _tenant_wl(0, small)
+    mgr = _build_manager(os.path.join(base, "parity"), 2, -99.0, [wl])
+    before = [r.answer for r in mgr.query_batch("t000", wl.queries)]
+    assert mgr.demote("t000")
+    t0 = time.perf_counter()
+    after = [r.answer for r in mgr.query_batch("t000", wl.queries)]
+    wall = time.perf_counter() - t0
+    parity = sum(int(a == b) for a, b in zip(after, before)) / len(before)
+    m = mgr.metrics()
+    emit("residency_parity", wall / len(wl.queries) * 1e6,
+         f"parity={parity:.3f};rehydrations={m['rehydrations']};"
+         f"evictions={m['evictions']}")
+    assert parity == 1.0, "rehydrated answers diverged from pre-eviction"
+    mgr.close()
+    return {"name": "residency_parity", "parity": parity,
+            "us_per_query": wall / len(wl.queries) * 1e6,
+            "rehydrations": m["rehydrations"], "evictions": m["evictions"]}
+
+
+def run(small: bool = False, json_path: Optional[str] = None) -> None:
+    base = tempfile.mkdtemp(prefix="memforest_resid_")
+    try:
+        rows: List[dict] = [_parity_row(small, base)]
+        for f in FACTORS:
+            rows.append(_factor_row(f, small, base))
+        if json_path:
+            doc = {"bench": "residency", "small": small,
+                   "hot_budget": HOT_BUDGET, "zipf_s": ZIPF_S,
+                   "digest_threshold": DIGEST_THRESHOLD,
+                   "event_batch": EVENT_BATCH, "rows": rows}
+            with open(json_path, "w") as fh:
+                json.dump(doc, fh, indent=2)
+            print(f"# wrote {json_path}", flush=True)
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="smoke-scale workload (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the sweep rows as JSON")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(small=args.small, json_path=args.json)

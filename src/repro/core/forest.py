@@ -75,6 +75,7 @@ class Forest:
         self.index_uploads = 0          # full device (re-)uploads
         self.index_row_updates = 0      # incremental scatter updates
         self.index_grows = 0            # device-side capacity grows
+        self.index_releases = 0         # device-cache frees (demotion)
 
     # ------------------------------------------------------------------
     # persistent-state writes
@@ -283,6 +284,50 @@ class Forest:
 
     def _shards(self) -> int:
         return shard_ops.mesh_shards(self.mesh, self.mesh_axis)
+
+    # ------------------------------------------------------------------
+    # residency: device-cache detach (tenant demotion) + footprint
+    # ------------------------------------------------------------------
+    def device_bytes(self) -> int:
+        """Bytes currently held by the device-resident index caches (the
+        capacity-padded arenas, f32). 0 when detached / never materialized."""
+        total = 0
+        for arr in (self._fact_dev, self._root_dev):
+            if arr is not None:
+                total += int(np.prod(arr.shape)) * 4
+        return total
+
+    def estimated_device_bytes(self) -> int:
+        """Host-side footprint estimate (index rows x dim x 4B) — what the
+        caches WOULD occupy once materialized. The residency budget planner
+        uses this so a hot-but-not-yet-queried tenant still counts against
+        the device budget."""
+        return 4 * self.config.embed_dim * (
+            int(self.fact_emb.shape[0]) + int(self._root_matrix.shape[0]))
+
+    def detach_device(self) -> int:
+        """Tenant demotion: eagerly free both device index caches
+        (``ops.release_rows``; ``index_releases`` counts freed arenas,
+        mirroring ``index_grows``) and return the bytes released.
+
+        Reattachment is transparent — the next ``fact_index_device()`` /
+        ``root_index_device()`` call re-uploads from host state exactly like
+        a freshly loaded snapshot, so only the rehydrated tenant's rows ever
+        transfer (other tenants' caches are untouched). Persistent and host
+        derived state are unaffected; results are identical across a
+        detach/reattach round-trip."""
+        freed = self.device_bytes()
+        for arr in (self._fact_dev, self._root_dev):
+            if arr is not None:
+                ops.release_rows(arr)
+                self.index_releases += 1
+        self._fact_dev = None
+        self._fact_dev_rows = 0
+        self._fact_dev_dirty.clear()
+        self._root_dev = None
+        self._root_dev_rows = 0
+        self._root_dev_dirty.clear()
+        return freed
 
     # ------------------------------------------------------------------
     # device-resident normalized index views (retrieval hot path)

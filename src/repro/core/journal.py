@@ -279,17 +279,25 @@ class DurableMemForest:
         self.ops_replayed += 1
 
     # -- snapshot + rotation ----------------------------------------------
-    def checkpoint(self) -> str:
+    def checkpoint(self, *, residency: Optional[Dict[str, Any]] = None) -> str:
         """Snapshot current state (tagged with the journal watermark), move
         the LATEST marker, rotate the journal. Crash-safe at every step:
         the snapshot write is tmp+rename-atomic, the marker flips last, and
         un-rotated journal records are filtered by the watermark on
-        replay."""
+        replay.
+
+        ``residency`` (persistence doc v3) rides in the snapshot's ``extra``
+        — the demotion record written by :meth:`demote`. It is excluded from
+        ``forest_state_digest`` like the rest of ``extra``, so residency
+        transitions never perturb state identity."""
         self._tick("snapshot:begin")
         watermark = self._seq - 1
         name = SNAPSHOT_FMT.format(watermark)
+        extra: Dict[str, Any] = {"journal_seq": watermark}
+        if residency is not None:
+            extra["residency"] = residency
         persistence.save_forest(self.forest, os.path.join(self.root, name),
-                                extra={"journal_seq": watermark})
+                                extra=extra)
         ckpt.write_latest(self.root, name)
         self._tick("snapshot:commit")
         # rotate: atomically replace the journal with an empty file — every
@@ -315,6 +323,27 @@ class DurableMemForest:
         self.snapshots_taken += 1
         self._ops_since_snapshot = 0
         return name
+
+    def demote(self) -> Tuple[str, int]:
+        """Tenant demotion as a **checkpoint-class** durable event: snapshot
+        (with a residency record in the doc's ``extra``) + rotate, then free
+        the device index caches. Returns (snapshot name, device bytes freed).
+
+        Deliberately NOT a journal op: journal records carry idempotency
+        keys into ``forest.applied_ops`` (and thus the state digest), so a
+        journaled demote retried across a crash would make recovered state
+        identity depend on how many times the demotion was attempted. A
+        checkpoint changes no persistent state, so a demote interrupted at
+        ANY boundary (``demote:begin`` .. ``demote:commit``) recovers
+        digest-identical and is safely retried whole. Rehydration afterwards
+        is exactly :meth:`open` — snapshot + (empty, just-rotated) journal
+        tail + transparent device re-upload on first index access."""
+        self._tick("demote:begin")
+        name = self.checkpoint(residency={"demoted": True,
+                                          "journal_seq": self._seq - 1})
+        freed = self.forest.detach_device()
+        self._tick("demote:commit")
+        return name, freed
 
     def close(self) -> None:
         self.writer.close()

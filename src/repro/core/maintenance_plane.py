@@ -36,14 +36,24 @@ from repro.core.forest import Forest
 
 class MaintenancePlane:
     def __init__(self, forest: Forest, *, flush_trees_per_unit: int = 4,
-                 compact_min_dead_fraction: float = 0.3, durable=None):
+                 compact_min_dead_fraction: float = 0.3, durable=None,
+                 residency=None):
         """``durable``: a :class:`repro.core.journal.DurableMemForest`
         wrapping the same forest. When given, compactions run through its
         journaled ``compact_tree`` op — compaction rewrites persistent state
         (tree arena + placement rows), so on a durable store it must be
-        journaled for crash recovery to reproduce the pre-crash digest."""
+        journaled for crash recovery to reproduce the pre-crash digest.
+
+        ``residency``: a :class:`repro.core.residency.ResidencyManager`.
+        When given, one over-budget tenant demotion counts as a work unit
+        (lowest priority — after merges/compaction/flush), so background-
+        thread deployments evict continuously off the serve thread. The
+        manager has its own lock, so cross-tenant demotion is safe from the
+        worker even though this plane's forest lock guards only one
+        tenant."""
         self.forest = forest
         self.durable = durable
+        self.residency = residency
         self.flush_trees_per_unit = flush_trees_per_unit
         self.compact_min_dead_fraction = compact_min_dead_fraction
         self.lock = threading.RLock()
@@ -57,6 +67,7 @@ class MaintenancePlane:
         self.merges_done = 0
         self.compactions_done = 0
         self.slots_reclaimed = 0
+        self.demotions_done = 0
 
     # ------------------------------------------------------------------
     # scheduling
@@ -84,7 +95,10 @@ class MaintenancePlane:
         with self.lock:
             flush_units = -(-len(self.forest.dirty_trees) //
                             max(self.flush_trees_per_unit, 1))
-            return len(self._merge_q) + len(self._compact_q) + flush_units
+            resid_units = self.residency.over_budget() \
+                if self.residency is not None else 0
+            return len(self._merge_q) + len(self._compact_q) + flush_units \
+                + resid_units
 
     # ------------------------------------------------------------------
     # draining
@@ -115,6 +129,10 @@ class MaintenancePlane:
                         [: self.flush_trees_per_unit])
             self.forest.flush(only=chunk)
             self.trees_flushed += len(chunk)
+            return True
+        if self.residency is not None \
+                and self.residency.enforce_budget(1):
+            self.demotions_done += 1
             return True
         return False
 
@@ -178,5 +196,6 @@ class MaintenancePlane:
             "maintenance_merges": self.merges_done,
             "maintenance_compactions": self.compactions_done,
             "maintenance_slots_reclaimed": self.slots_reclaimed,
+            "maintenance_demotions": self.demotions_done,
             "maintenance_pending": self.pending(),
         }

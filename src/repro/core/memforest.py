@@ -177,6 +177,15 @@ class MemForestSystem:
     def scale_stats(self) -> Dict[str, int]:
         return self.forest.scale_stats()
 
+    def device_bytes(self) -> int:
+        """Bytes currently pinned by the device-resident index caches."""
+        return self.forest.device_bytes()
+
+    def detach_device(self) -> int:
+        """Release the device index caches (residency demotion); the next
+        query transparently re-uploads. Returns bytes freed."""
+        return self.forest.detach_device()
+
     def state_digest(self) -> str:
         """Content hash of persistent state (persistence.forest_state_digest)
         — the state-identity relation recovery tests compare against."""

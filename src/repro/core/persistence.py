@@ -42,7 +42,20 @@ from repro.core.types import CanonicalFact, DialogueCell
 # deferred flush bakes in stale internal summaries; without the dirty marks
 # a restore would report has_derived state as clean and read-triggered
 # refresh would never repair it. v1 docs load with all of these empty.
-FORMAT_VERSION = 2
+#
+# v3 (residency): a snapshot written by a tenant demotion
+# (DurableMemForest.demote) carries extra["residency"] = {"demoted": True,
+# "journal_seq": ...} — the demotion record. Demotion itself is
+# checkpoint-class, not a journal op: the journal rotates at the demoting
+# checkpoint, so a demoted tenant's journal tail is empty and rehydration
+# is plain snapshot + (empty) tail recovery. "extra" stays excluded from
+# forest_state_digest, so residency transitions never change state
+# identity. The always-resident digest sidecar (root summaries + normalized
+# root embeddings, core/residency.py) lives NEXT TO the snapshot as a
+# separate DIGEST file — it is derived state, rebuilt at each demotion, and
+# deliberately outside the snapshot so demotion never rewrites history.
+# v1/v2 docs load unchanged (no residency record).
+FORMAT_VERSION = 3
 
 
 def _fact_rec(f: CanonicalFact) -> Dict[str, Any]:
@@ -139,7 +152,7 @@ def read_doc(path: str) -> Dict[str, Any]:
 def forest_from_doc(doc: Dict[str, Any], config: Optional[MemForestConfig] = None,
                     *, rematerialize_derived: bool = False,
                     kernel_impl: str = "reference") -> Forest:
-    assert doc["version"] in (1, FORMAT_VERSION), doc["version"]
+    assert doc["version"] in (1, 2, FORMAT_VERSION), doc["version"]
     cfg = config or MemForestConfig(
         chunk_turns=doc["config"]["chunk_turns"],
         branching_factor=doc["config"]["branching_factor"],

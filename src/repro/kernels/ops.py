@@ -126,6 +126,48 @@ def grow_rows(arr, add):
         [arr, jnp.zeros((add, arr.shape[1]), arr.dtype)])
 
 
+@functools.partial(jax.jit, static_argnames=("keep",))
+def _shrink_rows(arr, keep):
+    """Copy rows [0, keep) into a fresh (smaller) buffer so the oversized
+    arena can be deleted. Callers bucket ``keep`` (power of two) to bound the
+    jit-compile set, mirroring grow_rows' geometric policy."""
+    return jnp.array(arr[:keep])
+
+
+def _delete_buffer(arr) -> None:
+    """Eagerly free a device buffer. Dropping the Python reference leaves
+    the buffer alive until GC runs; at residency-eviction rates that is
+    exactly the device-memory leak the hot budget exists to prevent."""
+    delete = getattr(arr, "delete", None)
+    if delete is None:
+        return
+    try:
+        delete()
+    except Exception:
+        pass    # already deleted / backend without explicit free
+
+
+def release_rows(arr, keep: int = 0):
+    """Inverse of grow_rows: release device rows held by a cached index.
+
+    ``keep=0`` (tenant demotion) frees the whole buffer eagerly and returns
+    None — the caller drops its reference and the next index access is a
+    fresh upload. ``keep=n`` shrinks the geometric-growth arena: rows
+    [0, n) move into a fresh buffer (materialized before the old one is
+    deleted), the oversized arena is freed, and the shrunk buffer is
+    returned. Not jitted end-to-end: the delete is a host-side buffer
+    operation, so only the copy is compiled (``_shrink_rows``)."""
+    if arr is None:
+        return None
+    if keep <= 0:
+        _delete_buffer(arr)
+        return None
+    out = _shrink_rows(arr, keep)
+    jax.block_until_ready(out)
+    _delete_buffer(arr)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("impl",))
 def tree_refresh(child_emb, child_mask, *, impl="reference"):
     _check(impl)

@@ -37,6 +37,15 @@ Maintenance lane: when built with a ``maintenance`` plane
 maintenance work — summary refresh, compaction, queued merges — per step.
 Flushes no longer block the ingest or query drains; they interleave with
 the decode cadence (or run on the plane's background thread).
+
+Residency lane: pass ``residency=ResidencyManager(...)``
+(core/residency.py) and ``submit_session``/``submit_query`` accept a
+``tenant=`` id routed through the hot/cold tier — cold tenants rehydrate
+transparently inside the drains (queries may answer from the always-
+resident digest instead), and budget enforcement (demotion = snapshot +
+device-cache free) runs as its own bounded drain after the maintenance
+lane, so eviction work never sits on a decode step. ``tenant=None``
+requests keep using the engine's single ``memory`` system unchanged.
 """
 from __future__ import annotations
 
@@ -114,7 +123,8 @@ class ServeEngine:
                  memory=None, max_ingest_batch: int = 16,
                  max_query_batch: int = 32,
                  maintenance=None, maintenance_budget: int = 1,
-                 sharded: Optional[ShardedServeConfig] = None):
+                 sharded: Optional[ShardedServeConfig] = None,
+                 residency=None, residency_budget: int = 1):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -161,6 +171,15 @@ class ServeEngine:
         self.maintenance = maintenance
         self.maintenance_budget = maintenance_budget
         self.maintenance_turns = 0
+        # residency lane: multi-tenant hot/cold tier. The engine owns budget
+        # enforcement (auto_enforce off): demotions drain at most
+        # ``residency_budget`` per step AFTER the serve lanes, so eviction
+        # (snapshot + device free) never blocks a decode step.
+        self.residency = residency
+        self.residency_budget = residency_budget
+        self.residency_turns = 0
+        if residency is not None:
+            residency.auto_enforce = False
         # prefill-reuse accounting (PrefixCache)
         self.prefills = 0
         self.prefills_reused = 0
@@ -179,11 +198,17 @@ class ServeEngine:
         self.queue.append(r)
         return r.req_id
 
-    def submit_session(self, session) -> None:
-        """Queue a session for the ingest lane (requires a memory system)."""
-        if self.memory is None:
+    def submit_session(self, session, *, tenant: Optional[str] = None) -> None:
+        """Queue a session for the ingest lane. ``tenant`` routes the write
+        through the residency tier (rehydrating a cold tenant on drain);
+        None targets the engine's single memory system."""
+        if tenant is not None:
+            if self.residency is None:
+                raise RuntimeError(
+                    "tenant= requires a ResidencyManager (residency=)")
+        elif self.memory is None:
             raise RuntimeError("ServeEngine was built without a memory system")
-        self.ingest_queue.append(session)
+        self.ingest_queue.append((tenant, session))
 
     def _memory_lock(self):
         """Forest-access guard: the maintenance plane's lock when one is
@@ -195,32 +220,48 @@ class ServeEngine:
 
     def _drain_ingest(self) -> int:
         """One ingest-lane turn: everything queued (capped) goes through a
-        single batched write. With a maintenance plane attached the flush is
-        deferred to the plane — the drain only touches persistent state.
+        single batched write per destination — the shared memory system, or
+        one ``ResidencyManager.ingest`` per tenant (cold tenants rehydrate
+        here, inside the drain, not on the submit path). With a maintenance
+        plane attached the shared-system flush is deferred to the plane.
         Returns sessions ingested."""
         if not self.ingest_queue:
             return 0
         batch = self.ingest_queue[: self.max_ingest_batch]
         del self.ingest_queue[: len(batch)]
-        with self._memory_lock():
-            if self.maintenance is not None:
-                self.memory.ingest_batch(batch, defer_flush=True)
-            else:
-                self.memory.ingest_batch(batch)
-        self.ingest_batches += 1
+        groups: Dict[Optional[str], List] = {}
+        for tenant, session in batch:
+            groups.setdefault(tenant, []).append(session)
+        for tenant, sessions in groups.items():
+            if tenant is not None:
+                self.residency.ingest(tenant, sessions)
+                self.ingest_batches += 1
+                continue
+            with self._memory_lock():
+                if self.maintenance is not None:
+                    self.memory.ingest_batch(sessions, defer_flush=True)
+                else:
+                    self.memory.ingest_batch(sessions)
+            self.ingest_batches += 1
         self.ingest_sessions += len(batch)
         return len(batch)
 
     def submit_query(self, query, *, mode: Optional[str] = None,
-                     final_topk: Optional[int] = None) -> int:
-        """Queue a retrieval request for the query lane (requires a memory
-        system). The result lands in ``query_results[req_id]`` after the
-        engine step that drains it."""
-        if self.memory is None:
+                     final_topk: Optional[int] = None,
+                     tenant: Optional[str] = None) -> int:
+        """Queue a retrieval request for the query lane. ``tenant`` routes
+        through the residency tier (digest answer or rehydrate on drain);
+        None targets the engine's single memory system. The result lands in
+        ``query_results[req_id]`` after the engine step that drains it."""
+        if tenant is not None:
+            if self.residency is None:
+                raise RuntimeError(
+                    "tenant= requires a ResidencyManager (residency=)")
+        elif self.memory is None:
             raise RuntimeError("ServeEngine was built without a memory system")
         rid = self._next_id
         self._next_id += 1
-        self.query_queue.append((rid, query, mode, final_topk))
+        self.query_queue.append((rid, tenant, query, mode, final_topk))
         return rid
 
     def pop_query_result(self, req_id: int):
@@ -231,19 +272,25 @@ class ServeEngine:
 
     def _drain_queries(self) -> int:
         """One query-lane turn: everything queued (capped) goes through
-        batched retrieval — one ``query_batch`` per distinct (mode, topk)
-        group, usually exactly one. Returns queries answered."""
+        batched retrieval — one ``query_batch`` per distinct (tenant, mode,
+        topk) group, usually exactly one. Tenant groups run through the
+        residency tier (digest gate / rehydration happen here, inside the
+        drain). Returns queries answered."""
         if not self.query_queue:
             return 0
         batch = self.query_queue[: self.max_query_batch]
         del self.query_queue[: len(batch)]
         groups: Dict[Tuple, List] = {}
-        for rid, q, mode, topk in batch:
-            groups.setdefault((mode, topk), []).append((rid, q))
-        for (mode, topk), items in groups.items():
-            with self._memory_lock():
-                res = self.memory.query_batch(
-                    [q for _, q in items], mode=mode, final_topk=topk)
+        for rid, tenant, q, mode, topk in batch:
+            groups.setdefault((tenant, mode, topk), []).append((rid, q))
+        for (tenant, mode, topk), items in groups.items():
+            if tenant is not None:
+                res = self.residency.query_batch(
+                    tenant, [q for _, q in items], mode=mode, final_topk=topk)
+            else:
+                with self._memory_lock():
+                    res = self.memory.query_batch(
+                        [q for _, q in items], mode=mode, final_topk=topk)
             for (rid, _q), r in zip(items, res):
                 self.query_results[rid] = r
             self.query_batches += 1
@@ -323,6 +370,7 @@ class ServeEngine:
             self._drain_ingest()
             self._drain_queries()
             self._drain_maintenance()
+            self._drain_residency()
             return 0
         self.occupancy_sum += len(act) / self.max_batch
         self.steps += 1
@@ -349,6 +397,7 @@ class ServeEngine:
         self._drain_ingest()
         self._drain_queries()
         self._drain_maintenance()
+        self._drain_residency()
         return finished
 
     def _drain_maintenance(self) -> int:
@@ -362,6 +411,18 @@ class ServeEngine:
             self.maintenance_turns += 1
         return done
 
+    def _drain_residency(self) -> int:
+        """One residency-lane turn: demote at most ``residency_budget``
+        over-budget tenants (snapshot + device-cache free). Bounded per
+        step, so eviction interleaves with the decode cadence instead of
+        blocking it — the residency twin of the maintenance drain."""
+        if self.residency is None or self.residency_budget <= 0:
+            return 0
+        done = self.residency.enforce_budget(self.residency_budget)
+        if done:
+            self.residency_turns += 1
+        return done
+
     # ------------------------------------------------------------------
     def run_until_drained(self, max_steps: int = 10000) -> List[Request]:
         for _ in range(max_steps):
@@ -369,9 +430,13 @@ class ServeEngine:
                     and not self.query_queue \
                     and all(a is None for a in self.active):
                 # cooperative maintenance keeps stepping until its backlog
-                # (deferred flushes, compactions, merges) is drained too
-                if self.maintenance is None or self.maintenance_budget <= 0 \
-                        or self.maintenance.pending() == 0:
+                # (deferred flushes, compactions, merges) is drained too,
+                # and residency until the hot set is back within budget
+                if (self.maintenance is None or self.maintenance_budget <= 0
+                        or self.maintenance.pending() == 0) \
+                        and (self.residency is None
+                             or self.residency_budget <= 0
+                             or self.residency.over_budget() == 0):
                     break
             self.step()
         return self.finished
@@ -392,9 +457,13 @@ class ServeEngine:
             "queries_served": self.queries_served,
             "mean_query_batch": self.queries_served / max(self.query_batches, 1),
             "maintenance_turns": self.maintenance_turns,
+            "residency_turns": self.residency_turns,
             "serve_devices": (self.serve_mesh.devices.size
                               if self.serve_mesh is not None else 1),
             **(self.maintenance.metrics() if self.maintenance is not None else {}),
+            # hot_tenants / evictions / rehydrations / digest_answers /
+            # device_bytes(_est) ride straight into the engine metrics dict
+            **(self.residency.metrics() if self.residency is not None else {}),
         }
 
 

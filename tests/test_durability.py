@@ -67,6 +67,10 @@ def _apply(store, op):
         for scope in sorted(maintenance.compaction_candidates(
                 store.forest, min_dead_fraction=0.01)):
             store.compact_tree(scope, idempotency_key=f"{key}:{scope}")
+    elif kind == "demote":
+        # checkpoint-class (snapshot + journal rotation + device free): no
+        # journal record, no key — a retry after a crash just demotes again
+        store.demote()
     else:
         store.merge_from(_build(arg), idempotency_key=key)
 
@@ -400,6 +404,83 @@ def test_crash_sweep_journaled_compaction(tmp_path, wl, merge_wl):
         store, _ = _run_with_crash_then_recover(root, ops, k)
         assert store.state_digest() == want, \
             f"state diverged after crash at event #{k} ({probe.trace[k - 1]})"
+
+
+def test_crash_sweep_demotion_boundary(tmp_path, wl, merge_wl):
+    """Kill the process at every durability boundary in the demotion window
+    (residency eviction = snapshot + LATEST flip + journal rotation + device
+    free): demotion changes NO persistent state, so recovery must land on
+    the uninterrupted digest no matter where the kill hits — and the ops
+    that follow the demotion must apply to the recovered store cleanly."""
+    base = _plan(wl, merge_wl)
+    ops = base[:3] + [("demote", None, None)] + base[3:]
+    want = _run_uninterrupted(str(tmp_path / "ref"), ops,
+                              snapshot_every=2).state_digest()
+
+    probe = CrashInjector(None)
+    _run_uninterrupted(str(tmp_path / "probe"), ops, snapshot_every=2,
+                       crash=probe)
+    assert "demote:begin" in probe.trace and "demote:commit" in probe.trace
+    lo = probe.trace.index("demote:begin")
+    hi = probe.trace.index("demote:commit") + 1
+    for k in range(lo + 1, hi + 1):
+        root = str(tmp_path / f"crash_{k:02d}")
+        store, crashes = _run_with_crash_then_recover(root, ops, k)
+        assert crashes >= 1                     # the kill point actually fired
+        assert store.state_digest() == want, \
+            f"state diverged after crash at event #{k} ({probe.trace[k - 1]})"
+
+
+def test_crash_sweep_manager_demote_and_rehydrate(tmp_path, wl):
+    """Residency-manager lifecycle under the same sweep: crash at every
+    boundary of demote (digest write + checkpoint-class demotion) and of the
+    cold-query rehydration; a restarted manager must recover digest- and
+    answer-identical. Rehydration IS the crash-recovery open, so this also
+    pins that equivalence."""
+    from repro.core.residency import ResidencyConfig, ResidencyManager
+
+    def build(root, crash=None):
+        return ResidencyManager(
+            root, config=ResidencyConfig(hot_budget=2, digest_threshold=-99.0),
+            mem_config=MemForestConfig(), crash=crash)
+
+    def lifecycle(mgr):
+        mgr.ingest("t", wl.sessions[:4], idempotency_key="i0")
+        mgr.demote("t")
+        return [r.answer for r in mgr.query_batch("t", wl.queries)]
+
+    ref = build(str(tmp_path / "ref"))
+    want_ans = lifecycle(ref)                   # demote -> escalate -> rehydrate
+    want_digest = ref.state_digest("t")
+    ref.close()
+
+    probe = CrashInjector(None)
+    mgr = build(str(tmp_path / "probe"), crash=probe)
+    mgr.ingest("t", wl.sessions[:4], idempotency_key="i0")
+    events_ingest = probe.events                # covered by the core sweep
+    mgr.demote("t")
+    mgr.query_batch("t", wl.queries)
+    mgr.close()
+    for ev in ("demote:digest", "demote:begin", "demote:commit",
+               "rehydrate:begin", "rehydrate:commit"):
+        assert ev in probe.trace
+
+    for k in range(events_ingest + 1, probe.events + 1):
+        root = str(tmp_path / f"crash_{k:02d}")
+        mgr = build(root, crash=CrashInjector(k))
+        try:
+            lifecycle(mgr)
+            crashed = False
+        except SimulatedCrash:                  # process death mid-transition
+            crashed = True
+        mgr.close()
+        assert crashed, f"kill point #{k} never fired"
+        rec = build(root)                       # fresh process over the dir
+        assert rec.tenant_ids() == ["t"]
+        assert [r.answer for r in rec.query_batch("t", wl.queries)] == want_ans
+        assert rec.state_digest("t") == want_digest, \
+            f"state diverged after crash at event #{k} ({probe.trace[k - 1]})"
+        rec.close()
 
 
 @settings(max_examples=4, deadline=None)

@@ -1,0 +1,320 @@
+"""Tiered hot/cold tenant residency (core/residency.py): release_rows /
+detach-reattach correctness, traffic-aware eviction under the hot budget,
+rehydration parity across every browse mode, the confidence-gated digest
+escalation, manager restart, and the ServeEngine / MaintenancePlane lanes."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.config import MemForestConfig
+from repro.core.memforest import MemForestSystem
+from repro.core.residency import (ResidencyConfig, ResidencyManager,
+                                  TenantDigest)
+from repro.data.synthetic import make_workload
+from repro.kernels import ops
+
+from test_query_parity import MODES, _fact_sig
+
+ALWAYS_ESCALATE = -99.0     # any digest score clears the gate -> rehydrate
+NEVER_ESCALATE = 99.0       # no score clears the gate -> digest answers
+
+
+def _wl(seed, nq=8):
+    return make_workload(num_entities=2, num_sessions=3,
+                         transitions_per_entity=3, num_queries=nq, seed=seed)
+
+
+def _mgr(tmp_path, **cfg_kw):
+    cfg_kw.setdefault("hot_budget", 2)
+    cfg_kw.setdefault("digest_threshold", ALWAYS_ESCALATE)
+    return ResidencyManager(str(tmp_path / "tenants"),
+                            config=ResidencyConfig(**cfg_kw),
+                            mem_config=MemForestConfig())
+
+
+# ---------------------------------------------------------------------------
+# release_rows: the inverse of grow_rows
+# ---------------------------------------------------------------------------
+def test_release_rows_frees_and_shrinks():
+    arr = jnp.asarray(np.arange(32, dtype=np.float32).reshape(8, 4))
+    # keep=0: whole-buffer free
+    assert ops.release_rows(arr) is None
+    assert arr.is_deleted()
+    # keep=n: arena shrink — fresh buffer with rows [0, n), old one freed
+    arr = jnp.asarray(np.arange(32, dtype=np.float32).reshape(8, 4))
+    host = np.asarray(arr)
+    out = ops.release_rows(arr, keep=4)
+    assert out.shape == (4, 4)
+    np.testing.assert_array_equal(np.asarray(out), host[:4])
+    assert arr.is_deleted() and not out.is_deleted()
+    assert ops.release_rows(None) is None      # detached cache: no-op
+
+
+def test_detach_reattach_roundtrip_identical():
+    wl = _wl(3)
+    mf = MemForestSystem(MemForestConfig())
+    mf.ingest_batch(wl.sessions)
+    before = [(r.answer, r.evidence) for r in mf.query_batch(wl.queries)]
+    assert mf.device_bytes() > 0
+    up0 = mf.forest.index_uploads
+
+    freed = mf.detach_device()
+    assert freed > 0 and mf.device_bytes() == 0
+    assert mf.forest.index_releases == 2       # fact + root arenas freed
+
+    after = [(r.answer, r.evidence) for r in mf.query_batch(wl.queries)]
+    assert after == before                     # transparent reattach
+    assert mf.forest.index_uploads == up0 + 2  # one fresh upload per index
+    assert mf.device_bytes() > 0
+
+
+# ---------------------------------------------------------------------------
+# budget + eviction policy
+# ---------------------------------------------------------------------------
+def test_hot_budget_enforced_with_traffic_aware_victim(tmp_path):
+    mgr = _mgr(tmp_path, hot_budget=2)
+    wls = {t: _wl(i, nq=4) for i, t in enumerate(["a", "b", "c"])}
+    mgr.ingest("a", wls["a"].sessions)
+    mgr.ingest("b", wls["b"].sessions)
+    # heat up "a" so "b" is the coldest resident when "c" arrives
+    for _ in range(3):
+        mgr.query_batch("a", wls["a"].queries[:2])
+    mgr.ingest("c", wls["c"].sessions)
+    m = mgr.metrics()
+    assert m["hot_tenants"] <= 2 and m["evictions"] == 1
+    assert mgr.is_resident("a") and mgr.is_resident("c")
+    assert not mgr.is_resident("b")            # traffic-aware LRU victim
+    mgr.close()
+
+
+def test_device_byte_budget_triggers_demotion(tmp_path):
+    mgr = _mgr(tmp_path, hot_budget=8, device_budget_bytes=1)
+    mgr.ingest("a", _wl(1).sessions)
+    mgr.ingest("b", _wl(2).sessions)
+    # count budget allows 8 hot, the byte budget does not: only the hottest
+    # tenant survives (the cap never demotes the last resident)
+    assert mgr.metrics()["hot_tenants"] == 1
+    assert mgr.metrics()["evictions"] >= 1
+    mgr.close()
+
+
+def test_evict_rehydrate_does_not_reupload_other_tenants(tmp_path):
+    """Satellite regression: demoting A and rehydrating it must not touch
+    B's device caches — only the rehydrated tenant's rows transfer."""
+    mgr = _mgr(tmp_path, hot_budget=4)
+    wla, wlb = _wl(5), _wl(6)
+    mgr.ingest("a", wla.sessions)
+    mgr.ingest("b", wlb.sessions)
+    mgr.query_batch("a", wla.queries)          # materialize device caches
+    mgr.query_batch("b", wlb.queries)
+    forest_b = mgr.acquire("b").forest
+    up_b = forest_b.index_uploads
+    rows_b = forest_b.index_row_updates
+
+    assert mgr.demote("a")
+    assert not mgr.is_resident("a")
+    mgr.query_batch("b", wlb.queries)          # B untouched by A's eviction
+    assert forest_b.index_uploads == up_b
+    assert forest_b.index_row_updates == rows_b
+
+    mgr.query_batch("a", wla.queries)          # rehydrates A (escalate gate)
+    forest_a = mgr.acquire("a").forest
+    assert forest_a.index_uploads == 2         # exactly A's two fresh uploads
+    assert forest_b.index_uploads == up_b      # and still nothing on B
+    assert forest_b.index_row_updates == rows_b
+    assert mgr.metrics()["rehydrations"] == 1
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# rehydration parity: every browse mode, byte-identical
+# ---------------------------------------------------------------------------
+def test_rehydration_parity_all_modes(tmp_path):
+    wl = make_workload(num_entities=4, num_sessions=6,
+                       transitions_per_entity=3, num_queries=12, seed=21)
+    mgr = _mgr(tmp_path, hot_budget=4)
+    mgr.ingest("t", wl.sessions)
+    texts = [q.text for q in wl.queries]
+
+    store = mgr.acquire("t")
+    before = {m: [( _fact_sig(f), e) for f, e, _ in
+                  store.retriever.retrieve_batch(texts, mode=m)]
+              for m in MODES}
+    before_ans = {m: [r.answer for r in
+                      mgr.query_batch("t", wl.queries, mode=m)]
+                  for m in MODES}
+
+    assert mgr.demote("t")
+    assert not mgr.is_resident("t")
+    # first touch rehydrates (threshold forces escalation); all six modes
+    # must come back byte-identical — snapshots carry derived state, so the
+    # round-trip is exact, not just semantically equivalent
+    after_ans = {m: [r.answer for r in
+                     mgr.query_batch("t", wl.queries, mode=m)]
+                 for m in MODES}
+    store2 = mgr.acquire("t")
+    after = {m: [( _fact_sig(f), e) for f, e, _ in
+                 store2.retriever.retrieve_batch(texts, mode=m)]
+             for m in MODES}
+    assert after == before
+    assert after_ans == before_ans
+    assert mgr.metrics()["rehydrations"] == 1
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# digest escalation gate
+# ---------------------------------------------------------------------------
+def test_digest_answers_below_threshold_without_rehydration(tmp_path):
+    wl = _wl(31)
+    mgr = _mgr(tmp_path, hot_budget=2, digest_threshold=NEVER_ESCALATE)
+    mgr.ingest("t", wl.sessions)
+    mgr.demote("t")
+    res = mgr.query_batch("t", wl.queries)
+    assert len(res) == len(wl.queries)
+    assert not mgr.is_resident("t")            # never paid the rehydration
+    m = mgr.metrics()
+    assert m["digest_answers"] == len(wl.queries) and m["rehydrations"] == 0
+    # digest evidence is root-only grade: root summaries, non-empty
+    assert any(r.evidence for r in res)
+    mgr.close()
+
+
+def test_digest_gate_escalates_above_threshold(tmp_path):
+    wl = _wl(32)
+    mgr = _mgr(tmp_path, hot_budget=2, digest_threshold=ALWAYS_ESCALATE)
+    mgr.ingest("t", wl.sessions)
+    mgr.demote("t")
+    want = [r.answer for r in mgr.query_batch("t", wl.queries)]
+    m = mgr.metrics()
+    assert mgr.is_resident("t")                # escalated to the full store
+    assert m["rehydrations"] == 1 and m["digest_answers"] == 0
+    assert m["digest_escalations"] == 1
+    # escalated answers are full-fidelity (match a plain system)
+    ref = MemForestSystem(MemForestConfig())
+    ref.ingest_batch(wl.sessions)
+    assert want == [r.answer for r in ref.query_batch(wl.queries)]
+    mgr.close()
+
+
+def test_digest_answers_match_root_only_grade(tmp_path):
+    """The digest is the root summaries — its answers must equal root-only
+    browse over the same forest for queries that stay below the gate."""
+    wl = _wl(33)
+    mgr = _mgr(tmp_path, hot_budget=2, digest_threshold=NEVER_ESCALATE)
+    mgr.ingest("t", wl.sessions)
+    root_only = [r.answer for r in
+                 mgr.query_batch("t", wl.queries, mode="root-only")]
+    mgr.demote("t")
+    digest = [r.answer for r in mgr.query_batch("t", wl.queries)]
+    agree = sum(int(a == b) for a, b in zip(digest, root_only))
+    assert agree >= len(wl.queries) // 2       # same evidence tier
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# restart + persistence of the cold tier
+# ---------------------------------------------------------------------------
+def test_manager_restart_resumes_cold_tenants(tmp_path):
+    wl = _wl(41)
+    mgr = _mgr(tmp_path, hot_budget=2)
+    mgr.ingest("t", wl.sessions, idempotency_key="t:i0")
+    want_digest = mgr.state_digest("t")
+    want = [r.answer for r in mgr.query_batch("t", wl.queries)]
+    mgr.demote("t")
+    mgr.close()
+
+    # fresh process: tenants rediscovered COLD, digest sidecar loaded
+    m2 = ResidencyManager(str(tmp_path / "tenants"),
+                          config=ResidencyConfig(hot_budget=2,
+                                                 digest_threshold=NEVER_ESCALATE),
+                          mem_config=MemForestConfig())
+    assert m2.tenant_ids() == ["t"]
+    assert not m2.is_resident("t")
+    assert m2.metrics()["digest_bytes"] > 0
+    m2.query_batch("t", wl.queries[:2])        # served from the digest
+    assert m2.metrics()["digest_answers"] == 2 and not m2.is_resident("t")
+    # full rehydration is still exact
+    assert m2.state_digest("t") == want_digest
+    assert [r.answer for r in m2.query_batch("t", wl.queries)] == want
+    m2.close()
+
+
+def test_tenant_digest_roundtrip():
+    emb = np.random.default_rng(0).normal(size=(3, 8)).astype(np.float32)
+    d = TenantDigest(emb, ["alpha", "beta", "gamma"])
+    d2 = TenantDigest.from_bytes(d.to_bytes())
+    np.testing.assert_array_equal(d2.emb, emb)
+    assert d2.texts == d.texts and d2.nbytes() == d.nbytes()
+
+
+def test_invalid_tenant_id_rejected(tmp_path):
+    mgr = _mgr(tmp_path)
+    with pytest.raises(ValueError):
+        mgr.acquire("..")
+    with pytest.raises(ValueError):
+        mgr.acquire("a/b")
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+def test_serve_engine_multi_tenant_over_subscription(tmp_path):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_smoke_config("llama3_8b")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    mgr = _mgr(tmp_path, hot_budget=2)
+    eng = ServeEngine(model, params, max_batch=4, max_len=64, residency=mgr)
+    assert mgr.auto_enforce is False           # engine owns the drain
+
+    wls = {f"t{i}": _wl(50 + i, nq=4) for i in range(5)}
+    for tid, w in wls.items():
+        for s in w.sessions:
+            eng.submit_session(s, tenant=tid)
+    # decode traffic rides alongside: eviction must not block it
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(list(rng.integers(3, 400, size=5)), max_new_tokens=3)
+    done = eng.run_until_drained()
+    assert len(done) == 4 and all(r.out_tokens for r in done)
+
+    rids = {tid: [eng.submit_query(q, tenant=tid, mode="llm")
+                  for q in w.queries] for tid, w in wls.items()}
+    eng.run_until_drained()
+    for tid, w in wls.items():
+        for rid in rids[tid]:
+            assert eng.pop_query_result(rid) is not None
+
+    m = eng.metrics()
+    # satellite: residency metrics ride in the engine metrics dict
+    for key in ("hot_tenants", "evictions", "rehydrations", "digest_answers",
+                "device_bytes", "device_bytes_est"):
+        assert key in m
+    assert m["hot_tenants"] <= 2               # budget drained on the plane
+    assert m["evictions"] >= 3
+    assert m["queries_served"] == sum(len(w.queries) for w in wls.values())
+    mgr.close()
+
+
+def test_maintenance_plane_drains_residency_demotions(tmp_path):
+    from repro.core.maintenance_plane import MaintenancePlane
+
+    mgr = _mgr(tmp_path, hot_budget=1)
+    mgr.auto_enforce = False                   # plane owns enforcement
+    mgr.ingest("a", _wl(61).sessions)
+    mgr.ingest("b", _wl(62).sessions)
+    assert mgr.over_budget() == 1
+    plane = MaintenancePlane(mgr.acquire("b").forest, residency=mgr)
+    assert plane.pending() >= 1
+    plane.drain()
+    assert plane.demotions_done >= 1
+    assert mgr.over_budget() == 0
+    assert mgr.metrics()["hot_tenants"] == 1
+    mgr.close()
