@@ -21,7 +21,6 @@ one CPU, so this measures sharding overhead/parity, not real scaling.
 """
 from __future__ import annotations
 
-import json
 import time
 from typing import List, Optional
 
@@ -32,12 +31,8 @@ REPEATS = 3
 
 
 def _best_of(fn, repeats: int = REPEATS) -> float:
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+    from benchmarks.common import best_of
+    return best_of(fn, repeats)
 
 
 def _accuracy(answers, queries) -> float:
@@ -48,7 +43,7 @@ def _accuracy(answers, queries) -> float:
 def _batch_sweep(mf, queries, json_rows: Optional[list]) -> None:
     """Per-query retrieve() loop vs query_batch at each B — identical
     answers required (parity), throughput reported as queries/sec."""
-    from benchmarks.common import emit
+    from benchmarks.common import emit, latency_row
 
     n = len(queries)
     # warm every jit shape bucket both paths touch
@@ -57,38 +52,57 @@ def _batch_sweep(mf, queries, json_rows: Optional[list]) -> None:
         mf.query_batch(queries[:b], mode=SWEEP_MODE)
 
     base_answers = [mf.query(q, mode=SWEEP_MODE).answer for q in queries]
-    base_wall = _best_of(
-        lambda: [mf.query(q, mode=SWEEP_MODE) for q in queries])
+    base_samples: List[float] = []
+
+    def per_query_pass():
+        for q in queries:
+            t0 = time.perf_counter()
+            mf.query(q, mode=SWEEP_MODE)
+            base_samples.append(time.perf_counter() - t0)
+
+    base_wall = _best_of(per_query_pass)
+    base_lat = latency_row(base_samples)
     base_acc = _accuracy(base_answers, queries)
     emit("query_per_query_loop", base_wall / n * 1e6,
-         f"qps={n / base_wall:.1f};acc={base_acc:.3f}")
+         f"qps={n / base_wall:.1f};acc={base_acc:.3f};"
+         f"p50_us={base_lat['p50_s'] * 1e6:.0f};"
+         f"p99_us={base_lat['p99_s'] * 1e6:.0f}")
     if json_rows is not None:
         json_rows.append({"name": "per_query_loop", "qps": n / base_wall,
                           "us_per_query": base_wall / n * 1e6,
                           "speedup_vs_per_query": 1.0,
-                          "parity": 1.0, "acc": base_acc})
+                          "parity": 1.0, "acc": base_acc,
+                          "p50_s": base_lat["p50_s"],
+                          "p99_s": base_lat["p99_s"]})
 
     for b in SWEEP_BATCHES:
-        def run_batches(b=b):
+        call_samples: List[float] = []
+
+        def run_batches(b=b, call_samples=call_samples):
             answers: List[str] = []
             for i in range(0, n, b):
-                answers.extend(
-                    r.answer for r in mf.query_batch(queries[i:i + b],
-                                                     mode=SWEEP_MODE))
+                t0 = time.perf_counter()
+                rs = mf.query_batch(queries[i:i + b], mode=SWEEP_MODE)
+                call_samples.append(time.perf_counter() - t0)
+                answers.extend(r.answer for r in rs)
             return answers
         answers = run_batches()
         wall = _best_of(run_batches)
+        lat = latency_row(call_samples)        # per query_batch() call
         parity = sum(int(a == bse) for a, bse in zip(answers, base_answers)) / n
         speedup = base_wall / wall
         acc = _accuracy(answers, queries)
         emit(f"query_batch_B{b}", wall / n * 1e6,
              f"qps={n / wall:.1f};speedup_vs_per_query={speedup:.2f}x;"
-             f"parity={parity:.3f};acc={acc:.3f}")
+             f"parity={parity:.3f};acc={acc:.3f};"
+             f"p50_us={lat['p50_s'] * 1e6:.0f};p99_us={lat['p99_s'] * 1e6:.0f}")
         if json_rows is not None:
             json_rows.append({"name": f"query_batch_B{b}", "qps": n / wall,
                               "us_per_query": wall / n * 1e6,
                               "speedup_vs_per_query": speedup,
-                              "parity": parity, "acc": acc})
+                              "parity": parity, "acc": acc,
+                              "batch_call_p50_s": lat["p50_s"],
+                              "batch_call_p99_s": lat["p99_s"]})
 
 
 def _device_sweep(max_devices: int, small: bool,
@@ -150,12 +164,11 @@ def _device_sweep(max_devices: int, small: bool,
                      "ingest_sess_per_s": sess_per_s, "parity": parity})
         assert parity == 1.0, f"devices={c}: answers diverged from 1-device"
     if json_path:
-        doc = {"bench": "query_latency_devices", "mode": SWEEP_MODE,
-               "num_queries": nq, "small": small, "batch": B,
-               "available_devices": avail, "rows": rows}
-        with open(json_path, "w") as f:
-            json.dump(doc, f, indent=2)
-        print(f"# wrote {json_path}", flush=True)
+        from benchmarks.common import write_json
+        write_json(json_path, {
+            "bench": "query_latency_devices", "mode": SWEEP_MODE,
+            "num_queries": nq, "small": small, "batch": B,
+            "available_devices": avail, "rows": rows})
 
 
 def run(small: bool = False, json_path: Optional[str] = None,
@@ -206,12 +219,11 @@ def run(small: bool = False, json_path: Optional[str] = None,
         mf_sweep.ingest_session(s)
     _batch_sweep(mf_sweep, sweep_wl.queries, json_rows)
     if json_path:
-        doc = {"bench": "query_latency", "mode": SWEEP_MODE,
-               "num_queries": len(sweep_wl.queries), "small": small,
-               "rows": json_rows}
-        with open(json_path, "w") as f:
-            json.dump(doc, f, indent=2)
-        print(f"# wrote {json_path}", flush=True)
+        from benchmarks.common import write_json
+        write_json(json_path, {
+            "bench": "query_latency", "mode": SWEEP_MODE,
+            "num_queries": len(sweep_wl.queries), "small": small,
+            "rows": json_rows})
 
     if small:
         return

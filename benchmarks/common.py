@@ -1,14 +1,16 @@
-"""Shared benchmark utilities: builders, timing, CSV emission."""
+"""Shared benchmark utilities: builders, timing, percentiles, emission."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Sequence
 
 from repro.config import MemForestConfig
 from repro.core.baselines import ALL_BASELINES
 from repro.core.encoder import HashingEncoder
 from repro.core.memforest import MemForestSystem
 from repro.data.synthetic import Workload, make_workload
+from repro.obs.metrics import percentiles  # noqa: F401 (re-export)
 
 EMB_DIM = 256
 
@@ -60,3 +62,35 @@ def time_fn(fn: Callable, *, repeats: int = 3) -> float:
         ts.append(time.perf_counter() - t0)
     ts.sort()
     return ts[len(ts) // 2]
+
+
+def best_of(fn: Callable, repeats: int = 3) -> float:
+    """Best (min) wall seconds over ``repeats`` runs — the standard
+    measurement for the throughput benches (first run warms jit caches)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def latency_row(samples: Sequence[float],
+                qs: Sequence[float] = (0.50, 0.90, 0.99)) -> Dict[str, float]:
+    """{count, mean_s, p50_s, p90_s, p99_s, max_s} from raw wall samples
+    (exact sort — the benches' reference; the serve registry's streaming
+    histograms approximate the same stats within their bucket error)."""
+    if not samples:
+        return {"count": 0}
+    ps = percentiles(samples, qs)           # {"p50": v, "p90": v, ...}
+    return {"count": len(samples),
+            "mean_s": sum(samples) / len(samples),
+            **{f"{k}_s": v for k, v in ps.items()},
+            "max_s": max(samples)}
+
+
+def write_json(path: str, doc: Dict) -> None:
+    """Write a bench JSON document (the CI artifact format) + a marker."""
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {path}", flush=True)

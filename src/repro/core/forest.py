@@ -24,12 +24,15 @@ from repro.config import MemForestConfig
 from repro.core.memtree import TreeArena
 from repro.core.types import CanonicalFact, DialogueCell
 from repro.kernels import ops, shard_ops
+from repro.obs import Observability, get_obs
 
 
 class Forest:
-    def __init__(self, config: MemForestConfig, kernel_impl: str = "reference"):
+    def __init__(self, config: MemForestConfig, kernel_impl: str = "reference",
+                 obs: Optional[Observability] = None):
         self.config = config
         self.kernel_impl = kernel_impl
+        self.obs = get_obs(obs)
         self.trees: Dict[str, TreeArena] = {}
         self._tree_order: List[str] = []          # tree_id -> scope_key
         self.facts: List[CanonicalFact] = []
@@ -148,11 +151,17 @@ class Forest:
         if level_parallel is None:
             level_parallel = self.config.level_parallel
         self.flush_calls += 1
-        K = self.config.branching_factor
-        dim = self.config.embed_dim
-
         targets = set(self.dirty_trees) if only is None else \
             self.dirty_trees & set(only)
+        with self.obs.span("forest.flush", trees=len(targets)) as sp:
+            out = self._flush(level_parallel, targets)
+            sp.set(refreshes=out["refreshes"], levels=out["levels"],
+                   kernel_calls=out["kernel_calls"])
+        return out
+
+    def _flush(self, level_parallel: bool, targets: Set[str]) -> Dict[str, int]:
+        K = self.config.branching_factor
+        dim = self.config.embed_dim
         per_tree = {tid: self.trees[tid].dirty_by_level() for tid in targets}
         max_level = 0
         refreshes = 0
@@ -205,24 +214,25 @@ class Forest:
             cap *= 2
         if self.mesh is not None:
             cap = shard_ops.pad_rows(cap, self._shards())
-        child_emb = np.zeros((cap, K, dim), np.float32)
-        mask = np.zeros((cap, K), np.float32)
-        for i, (tree, n) in enumerate(batch):
-            kids = tree.children[n][:K]
-            for j, c in enumerate(kids):
-                child_emb[i, j] = tree.emb[c]
-                mask[i, j] = 1.0
-        if self.mesh is not None:
-            out = np.asarray(shard_ops.sharded_tree_refresh(
-                child_emb, mask, mesh=self.mesh, axis=self.mesh_axis,
-                impl=self.kernel_impl))
-        else:
-            out = np.asarray(ops.tree_refresh(
-                jnp.asarray(child_emb), jnp.asarray(mask), impl=self.kernel_impl
-            ))
-        for i, (tree, n) in enumerate(batch):
-            tree.emb[n] = out[i]
-            tree.refresh_text(n)
+        with self.obs.span("forest.tree_refresh", parents=P, padded=cap):
+            child_emb = np.zeros((cap, K, dim), np.float32)
+            mask = np.zeros((cap, K), np.float32)
+            for i, (tree, n) in enumerate(batch):
+                kids = tree.children[n][:K]
+                for j, c in enumerate(kids):
+                    child_emb[i, j] = tree.emb[c]
+                    mask[i, j] = 1.0
+            if self.mesh is not None:
+                out = np.asarray(shard_ops.sharded_tree_refresh(
+                    child_emb, mask, mesh=self.mesh, axis=self.mesh_axis,
+                    impl=self.kernel_impl))
+            else:
+                out = np.asarray(ops.tree_refresh(
+                    jnp.asarray(child_emb), jnp.asarray(mask),
+                    impl=self.kernel_impl))
+            for i, (tree, n) in enumerate(batch):
+                tree.emb[n] = out[i]
+                tree.refresh_text(n)
         return 1
 
     def eager_refresh_path(self, scope_key: str) -> int:

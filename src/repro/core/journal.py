@@ -41,6 +41,7 @@ import msgpack
 
 from repro.core import maintenance, persistence
 from repro.core.types import Session, Turn
+from repro.obs import Observability, get_obs
 from repro.runtime import checkpoint as ckpt
 
 _FRAME_HEADER = struct.Struct("<II")          # (body_len, crc32)
@@ -58,25 +59,36 @@ class JournalWriter:
     never tear the exactly-once contract, because unacked ops are retried
     by the client and deduped by key)."""
 
-    def __init__(self, path: str, *, fsync: bool = True):
+    def __init__(self, path: str, *, fsync: bool = True,
+                 obs: Optional[Observability] = None):
         self.path = path
         self.fsync = fsync
+        self.obs = get_obs(obs)
+        self._m_appends = self.obs.registry.counter("journal/appends")
+        self._m_bytes = self.obs.registry.counter("journal/appended_bytes")
         existed = os.path.exists(path)
         self._f = open(path, "ab")
         if fsync and not existed:
             # a fresh journal's directory entry must be durable too, or the
             # first acked append can vanish with the file on power loss
             ckpt.fsync_dir(os.path.dirname(os.path.abspath(path)))
-        self.appends = 0
+
+    @property
+    def appends(self) -> int:
+        return self._m_appends.value
 
     def append(self, record: Dict[str, Any]) -> None:
         body = msgpack.packb(record, use_bin_type=True)
-        self._f.write(_FRAME_HEADER.pack(len(body), zlib.crc32(body)))
-        self._f.write(body)
-        self._f.flush()
-        if self.fsync:
-            os.fsync(self._f.fileno())
-        self.appends += 1
+        with self.obs.span("journal.append",
+                           bytes=_FRAME_HEADER.size + len(body)):
+            self._f.write(_FRAME_HEADER.pack(len(body), zlib.crc32(body)))
+            self._f.write(body)
+            self._f.flush()
+            if self.fsync:
+                with self.obs.span("journal.fsync"):
+                    os.fsync(self._f.fileno())
+        self._m_appends.inc()
+        self._m_bytes.inc(_FRAME_HEADER.size + len(body))
 
     def close(self) -> None:
         if not self._f.closed:
@@ -142,7 +154,7 @@ class DurableMemForest:
 
     def __init__(self, system, root_dir: str, *, fsync: bool = True,
                  snapshot_every: int = 0, crash=None, keep_snapshots: int = 2,
-                 _next_seq: int = 1):
+                 _next_seq: int = 1, obs: Optional[Observability] = None):
         self.system = system
         self.root = root_dir
         os.makedirs(root_dir, exist_ok=True)
@@ -150,8 +162,15 @@ class DurableMemForest:
         self.snapshot_every = snapshot_every
         self.keep_snapshots = keep_snapshots
         self._seq = _next_seq
+        # share the wrapped system's observability handle unless given one,
+        # so journal/* metrics and span histograms land in the same registry
+        # the forest/flush instrumentation reports to
+        self.obs = obs if obs is not None else get_obs(
+            getattr(system, "obs", None))
         self.writer = JournalWriter(os.path.join(root_dir, JOURNAL_NAME),
-                                    fsync=fsync)
+                                    fsync=fsync, obs=self.obs)
+        self._m_commits = self.obs.registry.counter("journal/commits")
+        self._m_checkpoints = self.obs.registry.counter("journal/checkpoints")
         # counters
         self.ops_applied = 0
         self.duplicates_skipped = 0
@@ -192,7 +211,9 @@ class DurableMemForest:
     def _committed(self, key: str) -> None:
         self.forest.applied_ops.add(key)
         self.ops_applied += 1
+        self._m_commits.inc()
         self._ops_since_snapshot += 1
+        self.obs.event("journal.commit", key=key)
         self._tick("apply")
         if self.snapshot_every and self._ops_since_snapshot >= self.snapshot_every:
             self.checkpoint()
@@ -290,6 +311,11 @@ class DurableMemForest:
         — the demotion record written by :meth:`demote`. It is excluded from
         ``forest_state_digest`` like the rest of ``extra``, so residency
         transitions never perturb state identity."""
+        with self.obs.span("journal.checkpoint",
+                           watermark=self._seq - 1):
+            return self._checkpoint(residency=residency)
+
+    def _checkpoint(self, *, residency: Optional[Dict[str, Any]] = None) -> str:
         self._tick("snapshot:begin")
         watermark = self._seq - 1
         name = SNAPSHOT_FMT.format(watermark)
@@ -310,7 +336,8 @@ class DurableMemForest:
             os.fsync(f.fileno())
         os.replace(tmp, jpath)
         ckpt.fsync_dir(self.root)
-        self.writer = JournalWriter(jpath, fsync=self.writer.fsync)
+        self.writer = JournalWriter(jpath, fsync=self.writer.fsync,
+                                    obs=self.obs)
         self._tick("journal:rotate")
         # GC old snapshots (keep the newest keep_snapshots; the one the
         # LATEST marker points at is always kept). snaps[:-k] would be wrong
@@ -321,6 +348,7 @@ class DurableMemForest:
             if n != name:
                 os.remove(os.path.join(self.root, n))
         self.snapshots_taken += 1
+        self._m_checkpoints.inc()
         self._ops_since_snapshot = 0
         return name
 
@@ -353,7 +381,8 @@ class DurableMemForest:
     def open(cls, root_dir: str, *, config=None, encoder=None,
              kernel_impl: str = "reference", fsync: bool = True,
              snapshot_every: int = 0, crash=None,
-             keep_snapshots: int = 2) -> "DurableMemForest":
+             keep_snapshots: int = 2,
+             obs: Optional[Observability] = None) -> "DurableMemForest":
         """Crash-safe restore: latest snapshot (if any) + journal-tail
         replay. Records at or below the snapshot watermark, or whose
         idempotency key the snapshot already carries, are skipped —
@@ -370,12 +399,14 @@ class DurableMemForest:
                                                  kernel_impl=kernel_impl)
             watermark = int(doc.get("extra", {}).get("journal_seq", 0))
             system = MemForestSystem(forest.config, encoder,
-                                     kernel_impl=kernel_impl)
+                                     kernel_impl=kernel_impl, obs=obs)
+            forest.obs = system.obs     # restored forest joins our registry
             system.forest = forest
             system.retriever.forest = forest
             system.batcher.forest = forest
         else:
-            system = MemForestSystem(config, encoder, kernel_impl=kernel_impl)
+            system = MemForestSystem(config, encoder, kernel_impl=kernel_impl,
+                                     obs=obs)
 
         jpath = os.path.join(root_dir, JOURNAL_NAME)
         records, valid_len = scan_journal(jpath)
@@ -392,7 +423,8 @@ class DurableMemForest:
         next_seq = max([watermark] + [r["seq"] for r in records]) + 1
         store = cls(system, root_dir, fsync=fsync,
                     snapshot_every=snapshot_every, crash=crash,
-                    keep_snapshots=keep_snapshots, _next_seq=next_seq)
+                    keep_snapshots=keep_snapshots, _next_seq=next_seq,
+                    obs=obs)
         for rec in records:
             if rec["seq"] <= watermark:
                 continue

@@ -32,12 +32,13 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core import maintenance
 from repro.core.forest import Forest
+from repro.obs import Observability, get_obs
 
 
 class MaintenancePlane:
     def __init__(self, forest: Forest, *, flush_trees_per_unit: int = 4,
                  compact_min_dead_fraction: float = 0.3, durable=None,
-                 residency=None):
+                 residency=None, obs: Optional[Observability] = None):
         """``durable``: a :class:`repro.core.journal.DurableMemForest`
         wrapping the same forest. When given, compactions run through its
         journaled ``compact_tree`` op — compaction rewrites persistent state
@@ -61,13 +62,44 @@ class MaintenancePlane:
         self._compact_q: Deque[str] = deque()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        # counters
-        self.units_run = 0
-        self.trees_flushed = 0
-        self.merges_done = 0
-        self.compactions_done = 0
-        self.slots_reclaimed = 0
-        self.demotions_done = 0
+        # counters live in the registry (maintenance/* namespace); the
+        # legacy attribute names read back through properties below and
+        # metrics() reports straight from the registry
+        self.obs = get_obs(obs)
+        reg = self.obs.registry
+        self._m_units = reg.counter("maintenance/units_run")
+        self._m_flushed = reg.counter("maintenance/trees_flushed")
+        self._m_merges = reg.counter("maintenance/merges_done")
+        self._m_compactions = reg.counter("maintenance/compactions_done")
+        self._m_reclaimed = reg.counter("maintenance/slots_reclaimed")
+        self._m_demotions = reg.counter("maintenance/demotions_done")
+
+    # ------------------------------------------------------------------
+    # registry-backed legacy counters (attribute back-compat)
+    # ------------------------------------------------------------------
+    @property
+    def units_run(self) -> int:
+        return self._m_units.value
+
+    @property
+    def trees_flushed(self) -> int:
+        return self._m_flushed.value
+
+    @property
+    def merges_done(self) -> int:
+        return self._m_merges.value
+
+    @property
+    def compactions_done(self) -> int:
+        return self._m_compactions.value
+
+    @property
+    def slots_reclaimed(self) -> int:
+        return self._m_reclaimed.value
+
+    @property
+    def demotions_done(self) -> int:
+        return self._m_demotions.value
 
     # ------------------------------------------------------------------
     # scheduling
@@ -110,29 +142,32 @@ class MaintenancePlane:
         regenerate."""
         if self._merge_q:
             src, key = self._merge_q.popleft()
-            maintenance.migrate_merge(self.forest, src,
-                                      idempotency_key=key, flush=False)
-            self.merges_done += 1
+            with self.obs.span("maintenance.merge"):
+                maintenance.migrate_merge(self.forest, src,
+                                          idempotency_key=key, flush=False)
+            self._m_merges.inc()
             return True
         if self._compact_q:
             scope = self._compact_q.popleft()
             if scope in self.forest.trees:
-                if self.durable is not None:
-                    stats = self.durable.compact_tree(scope)
-                else:
-                    stats = maintenance.compact_tree(self.forest, scope)
-                self.slots_reclaimed += stats["slots_reclaimed"]
-                self.compactions_done += 1
+                with self.obs.span("maintenance.compaction", scope=scope):
+                    if self.durable is not None:
+                        stats = self.durable.compact_tree(scope)
+                    else:
+                        stats = maintenance.compact_tree(self.forest, scope)
+                self._m_reclaimed.inc(stats["slots_reclaimed"])
+                self._m_compactions.inc()
             return True
         if self.forest.dirty_trees:
             chunk = set(sorted(self.forest.dirty_trees)
                         [: self.flush_trees_per_unit])
-            self.forest.flush(only=chunk)
-            self.trees_flushed += len(chunk)
+            with self.obs.span("maintenance.flush_slice", trees=len(chunk)):
+                self.forest.flush(only=chunk)
+            self._m_flushed.inc(len(chunk))
             return True
         if self.residency is not None \
                 and self.residency.enforce_budget(1):
-            self.demotions_done += 1
+            self._m_demotions.inc()
             return True
         return False
 
@@ -145,7 +180,7 @@ class MaintenancePlane:
                 if not self._run_one():
                     break
                 done += 1
-                self.units_run += 1
+                self._m_units.inc()
             return {"units": done, "pending": self.pending()}
 
     def drain(self, max_units: int = 100000) -> int:
@@ -190,12 +225,14 @@ class MaintenancePlane:
         self._thread = None
 
     def metrics(self) -> Dict[str, int]:
+        """Legacy keys, reported through the registry (the counters behind
+        the properties ARE registry counters — see __init__)."""
         return {
-            "maintenance_units": self.units_run,
-            "maintenance_trees_flushed": self.trees_flushed,
-            "maintenance_merges": self.merges_done,
-            "maintenance_compactions": self.compactions_done,
-            "maintenance_slots_reclaimed": self.slots_reclaimed,
-            "maintenance_demotions": self.demotions_done,
+            "maintenance_units": self._m_units.value,
+            "maintenance_trees_flushed": self._m_flushed.value,
+            "maintenance_merges": self._m_merges.value,
+            "maintenance_compactions": self._m_compactions.value,
+            "maintenance_slots_reclaimed": self._m_reclaimed.value,
+            "maintenance_demotions": self._m_demotions.value,
             "maintenance_pending": self.pending(),
         }

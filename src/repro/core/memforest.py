@@ -19,6 +19,7 @@ from repro.core.forest import Forest
 from repro.core.ingest import IngestBatcher
 from repro.core.retrieval import Retriever, answer_query
 from repro.core.types import Query, QueryResult, Session, WriteStats
+from repro.obs import Observability, get_obs
 
 
 class MemForestSystem:
@@ -26,12 +27,15 @@ class MemForestSystem:
 
     def __init__(self, config: Optional[MemForestConfig] = None, encoder=None,
                  kernel_impl: str = "reference", *, eager: bool = False,
-                 parallel_extraction: bool = True):
+                 parallel_extraction: bool = True,
+                 obs: Optional[Observability] = None):
         from repro.core.encoder import HashingEncoder
 
         self.config = config or MemForestConfig()
         self.encoder = encoder or HashingEncoder(dim=self.config.embed_dim)
-        self.forest = Forest(self.config, kernel_impl=kernel_impl)
+        self.obs = get_obs(obs)
+        self.forest = Forest(self.config, kernel_impl=kernel_impl,
+                             obs=self.obs)
         self.eager = eager                      # ablation: per-insert refresh
         if parallel_extraction:
             self.extractor = extraction.ParallelExtractor(
@@ -206,6 +210,7 @@ class MemForestSystem:
         forest = persistence.load_forest(
             path, config, rematerialize_derived=rematerialize_derived)
         sys_ = cls(forest.config, encoder)
+        forest.obs = sys_.obs           # rebuilt forest reports to our registry
         sys_.forest = forest
         sys_.retriever.forest = forest
         sys_.batcher.forest = forest

@@ -49,6 +49,7 @@ from repro.core.journal import DurableMemForest, JOURNAL_NAME
 from repro.core.retrieval import answer_query
 from repro.core.types import CanonicalFact, QueryResult
 from repro.data import templates as T
+from repro.obs import Observability, get_obs
 from repro.runtime import checkpoint as ckpt
 
 DIGEST_NAME = "DIGEST"
@@ -158,7 +159,8 @@ class ResidencyManager:
     def __init__(self, root_dir: str, *, config: Optional[ResidencyConfig] = None,
                  mem_config: Optional[MemForestConfig] = None, encoder=None,
                  kernel_impl: str = "reference", crash=None,
-                 auto_enforce: bool = True):
+                 auto_enforce: bool = True,
+                 obs: Optional[Observability] = None):
         from repro.core.encoder import HashingEncoder
 
         self.root = root_dir
@@ -173,14 +175,42 @@ class ResidencyManager:
         self.lock = threading.RLock()
         self._tenants: Dict[str, _Tenant] = {}
         self._clock = 0
-        # counters (engine metrics + benchmarks read these)
-        self.evictions = 0
-        self.rehydrations = 0
-        self.digest_answers = 0
-        self.digest_escalations = 0
-        self.bytes_released = 0
+        # counters live in the registry (residency/* namespace); the legacy
+        # attribute names (engine metrics + benchmarks read these) come back
+        # through properties and metrics() reports from the registry.
+        # Demote/rehydrate/digest-answer each run under a span.
+        self.obs = get_obs(obs)
+        reg = self.obs.registry
+        self._m_evictions = reg.counter("residency/evictions")
+        self._m_rehydrations = reg.counter("residency/rehydrations")
+        self._m_digest_answers = reg.counter("residency/digest_answers")
+        self._m_digest_escalations = reg.counter("residency/digest_escalations")
+        self._m_bytes_released = reg.counter("residency/bytes_released")
         os.makedirs(root_dir, exist_ok=True)
         self._scan_existing()
+
+    # ------------------------------------------------------------------
+    # registry-backed legacy counters (attribute back-compat)
+    # ------------------------------------------------------------------
+    @property
+    def evictions(self) -> int:
+        return self._m_evictions.value
+
+    @property
+    def rehydrations(self) -> int:
+        return self._m_rehydrations.value
+
+    @property
+    def digest_answers(self) -> int:
+        return self._m_digest_answers.value
+
+    @property
+    def digest_escalations(self) -> int:
+        return self._m_digest_escalations.value
+
+    @property
+    def bytes_released(self) -> int:
+        return self._m_bytes_released.value
 
     # ------------------------------------------------------------------
     # tenant table
@@ -235,17 +265,18 @@ class ResidencyManager:
         index access, so only THIS tenant's rows ever transfer."""
         was_cold = t.demoted or ckpt.read_latest(t.path) is not None \
             or os.path.exists(os.path.join(t.path, JOURNAL_NAME))
-        self._tick("rehydrate:begin")
-        cfg = self.config
-        store = DurableMemForest.open(
-            t.path, config=self.mem_config, encoder=self.encoder,
-            kernel_impl=self.kernel_impl, fsync=cfg.fsync,
-            snapshot_every=cfg.snapshot_every, crash=self.crash,
-            keep_snapshots=cfg.keep_snapshots)
-        t.store = store
-        self._tick("rehydrate:commit")
+        with self.obs.span("residency.rehydrate", tenant=t.tenant_id):
+            self._tick("rehydrate:begin")
+            cfg = self.config
+            store = DurableMemForest.open(
+                t.path, config=self.mem_config, encoder=self.encoder,
+                kernel_impl=self.kernel_impl, fsync=cfg.fsync,
+                snapshot_every=cfg.snapshot_every, crash=self.crash,
+                keep_snapshots=cfg.keep_snapshots, obs=self.obs)
+            t.store = store
+            self._tick("rehydrate:commit")
         if was_cold:
-            self.rehydrations += 1
+            self._m_rehydrations.inc()
         t.demoted = False
 
     def _demote(self, t: _Tenant) -> None:
@@ -255,20 +286,22 @@ class ResidencyManager:
         store = t.store
         assert store is not None
         freed = self._footprint(t)
-        if store.forest.dirty_trees:
-            # digest + snapshot must capture fresh root summaries; flush is
-            # derived-only work (never journaled), safe at any point
-            store.forest.flush()
-        digest = TenantDigest.from_forest(store.forest)
-        self._tick("demote:digest")
-        self._write_digest(t, digest)
-        store.demote()                    # ticks demote:begin/commit inside
-        store.close()
+        with self.obs.span("residency.demote", tenant=t.tenant_id,
+                           bytes=freed):
+            if store.forest.dirty_trees:
+                # digest + snapshot must capture fresh root summaries; flush
+                # is derived-only work (never journaled), safe at any point
+                store.forest.flush()
+            digest = TenantDigest.from_forest(store.forest)
+            self._tick("demote:digest")
+            self._write_digest(t, digest)
+            store.demote()                # ticks demote:begin/commit inside
+            store.close()
         t.store = None
         t.digest = digest
         t.demoted = True
-        self.evictions += 1
-        self.bytes_released += freed
+        self._m_evictions.inc()
+        self._m_bytes_released.inc(freed)
 
     def _write_digest(self, t: _Tenant, digest: TenantDigest) -> None:
         path = os.path.join(t.path, DIGEST_NAME)
@@ -319,10 +352,10 @@ class ResidencyManager:
             if t.store is None:
                 res = self._digest_answer(t, queries, final_topk)
                 if res is not None:
-                    self.digest_answers += len(queries)
+                    self._m_digest_answers.inc(len(queries))
                     return res
                 if t.digest is not None and t.digest.emb.shape[0]:
-                    self.digest_escalations += 1
+                    self._m_digest_escalations.inc()
                 self._rehydrate(t)
             out = t.store.query_batch(queries, mode=mode, final_topk=final_topk)
         if self.auto_enforce:
@@ -403,6 +436,8 @@ class ResidencyManager:
             return sorted(self._tenants)
 
     def metrics(self) -> Dict[str, Any]:
+        """Legacy keys, reported through the registry (the transition
+        counters behind the properties ARE registry counters)."""
         with self.lock:
             res = self._residents()
             return {
@@ -410,17 +445,17 @@ class ResidencyManager:
                 "hot_tenants": len(res),
                 "cold_tenants": len(self._tenants) - len(res),
                 "hot_budget": self.config.hot_budget,
-                "evictions": self.evictions,
-                "rehydrations": self.rehydrations,
-                "digest_answers": self.digest_answers,
-                "digest_escalations": self.digest_escalations,
+                "evictions": self._m_evictions.value,
+                "rehydrations": self._m_rehydrations.value,
+                "digest_answers": self._m_digest_answers.value,
+                "digest_escalations": self._m_digest_escalations.value,
                 "device_bytes": sum(t.store.forest.device_bytes()
                                     for t in res),
                 "device_bytes_est": sum(self._footprint(t) for t in res),
                 "digest_bytes": sum(t.digest.nbytes()
                                     for t in self._tenants.values()
                                     if t.digest is not None),
-                "bytes_released": self.bytes_released,
+                "bytes_released": self._m_bytes_released.value,
             }
 
     def close(self) -> None:
@@ -445,13 +480,23 @@ class ResidencyManager:
         digest = t.digest
         if digest is None or digest.emb.shape[0] == 0:
             return None
+        with self.obs.span("residency.digest_answer", tenant=t.tenant_id,
+                           queries=len(queries)) as sp:
+            return self._digest_answer_scored(t, queries, final_topk, sp)
+
+    def _digest_answer_scored(self, t: _Tenant, queries,
+                              final_topk: Optional[int],
+                              sp) -> Optional[List[QueryResult]]:
+        digest = t.digest
         t0 = time.perf_counter()
         calls0 = self.encoder.stats.calls
         q_embs = self.encoder.encode([q.text for q in queries])
         qn = q_embs / (np.linalg.norm(q_embs, axis=-1, keepdims=True) + 1e-6)
         sims = qn @ digest.emb.T                      # (Q, T)
         if float(sims.max()) >= self.config.digest_threshold:
+            sp.set(answered=False)                    # escalating
             return None
+        sp.set(answered=True)
         topk = final_topk or self.mem_config.final_topk
         rows_k = min(self.mem_config.forest_recall_topk, digest.emb.shape[0])
         out: List[QueryResult] = []

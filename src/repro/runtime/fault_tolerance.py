@@ -141,10 +141,17 @@ class CrashInjector:
     rotates. ``crash_at=k`` raises :class:`SimulatedCrash` at the k-th event
     (1-based), so a test sweep over k exercises a kill at EVERY boundary the
     exactly-once recovery contract must survive. ``crash_at=None`` records
-    the event trace without crashing (used to size the sweep)."""
+    the event trace without crashing (used to size the sweep)).
 
-    def __init__(self, crash_at: Optional[int] = None):
+    ``obs`` (a :class:`repro.obs.Observability`) mirrors every tick into the
+    trace sink as a ``durability/<event>`` point event under whichever span
+    is open at the time (e.g. ``journal.append`` or ``journal.checkpoint``),
+    so crash sweeps can assert span-level event ordering straight from the
+    trace (tests/test_durability.py)."""
+
+    def __init__(self, crash_at: Optional[int] = None, obs=None):
         self.crash_at = crash_at
+        self.obs = obs
         self.events = 0
         self.fired = False
         self.trace: List[str] = []
@@ -154,6 +161,8 @@ class CrashInjector:
             return
         self.events += 1
         self.trace.append(event)
+        if self.obs is not None:
+            self.obs.event("durability/" + event, n=self.events)
         if self.crash_at is not None and self.events >= self.crash_at:
             self.fired = True
             raise SimulatedCrash(f"injected crash at event #{self.events} ({event})")

@@ -46,6 +46,14 @@ resident digest instead), and budget enforcement (demotion = snapshot +
 device-cache free) runs as its own bounded drain after the maintenance
 lane, so eviction work never sits on a decode step. ``tenant=None``
 requests keep using the engine's single ``memory`` system unchanged.
+
+Observability: pass ``obs=Observability(...)`` (repro/obs) — or rely on the
+per-engine default — and every step phase (admit, prefill, decode, the
+ingest/query/maintenance/residency drains) runs under a span; the legacy
+counter set lives in the ``serve/*`` registry namespace and per-request
+queue-to-done waits stream into ``serve/{ingest,query}_wait_s`` histograms.
+Tracing is off by default (span sites cost one boolean check);
+``repro.obs.enable_tracing(sink)`` lights up the whole process.
 """
 from __future__ import annotations
 
@@ -60,6 +68,7 @@ import numpy as np
 
 from repro.data.tokenizer import HashTokenizer
 from repro.models.factory import Model
+from repro.obs import Observability, get_obs
 
 
 @dataclass
@@ -124,7 +133,8 @@ class ServeEngine:
                  max_query_batch: int = 32,
                  maintenance=None, maintenance_budget: int = 1,
                  sharded: Optional[ShardedServeConfig] = None,
-                 residency=None, residency_budget: int = 1):
+                 residency=None, residency_budget: int = 1,
+                 obs: Optional[Observability] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -136,9 +146,30 @@ class ServeEngine:
         self.cache = None
         self.prefix_cache = PrefixCache()
         self._next_id = 0
-        self.steps = 0
-        self.decoded_tokens = 0
-        self.occupancy_sum = 0.0
+        # observability: every legacy counter below now lives in the
+        # registry (serve/* namespace) and is read back through a property,
+        # so engine.metrics() reports through the registry while attribute
+        # access (engine.ingest_sessions, ...) keeps working. Span sites
+        # (engine.step phases) go through self.obs.span and cost one bool
+        # check while tracing is disabled.
+        self.obs = get_obs(obs)
+        reg = self.obs.registry
+        self._m_steps = reg.counter("serve/decode_steps")
+        self._m_decoded = reg.counter("serve/decoded_tokens")
+        self._m_occupancy = reg.counter("serve/occupancy_sum")
+        self._m_prefills = reg.counter("serve/prefills")
+        self._m_prefills_reused = reg.counter("serve/prefills_reused")
+        self._m_ingest_batches = reg.counter("serve/ingest_batches")
+        self._m_ingest_sessions = reg.counter("serve/ingest_sessions")
+        self._m_query_batches = reg.counter("serve/query_batches")
+        self._m_queries_served = reg.counter("serve/queries_served")
+        self._m_maintenance_turns = reg.counter("serve/maintenance_turns")
+        self._m_residency_turns = reg.counter("serve/residency_turns")
+        # per-request queue-to-done latency distributions (always on —
+        # these are metrics, not traces; a record is ~100ns)
+        self._h_ingest_wait = reg.histogram("serve/ingest_wait_s")
+        self._h_query_wait = reg.histogram("serve/query_wait_s")
+        self._h_decode_request = reg.histogram("serve/decode_request_s")
         # ingest-request lane: write traffic (whole sessions bound for the
         # memory substrate) rides the same engine loop as decode slots —
         # everything queued between two engine steps drains as ONE
@@ -154,40 +185,78 @@ class ServeEngine:
             memory.set_mesh(self.serve_mesh, sharded.axis)
         self.max_ingest_batch = max_ingest_batch
         self.ingest_queue: List = []
-        self.ingest_batches = 0
-        self.ingest_sessions = 0
         # query-request lane: read traffic mirrors the ingest lane —
         # everything queued between two engine steps drains as ONE
         # MemForestSystem.query_batch call (cross-tenant read batching)
         self.max_query_batch = max_query_batch
         self.query_queue: List = []
         self.query_results: Dict[int, object] = {}
-        self.query_batches = 0
-        self.queries_served = 0
         # maintenance lane: with a plane attached, ingest drains defer their
         # flush and the engine drains `maintenance_budget` units of refresh/
         # compaction/merge work per step instead. The plane's lock guards
         # forest access when its background thread is running.
         self.maintenance = maintenance
         self.maintenance_budget = maintenance_budget
-        self.maintenance_turns = 0
         # residency lane: multi-tenant hot/cold tier. The engine owns budget
         # enforcement (auto_enforce off): demotions drain at most
         # ``residency_budget`` per step AFTER the serve lanes, so eviction
         # (snapshot + device free) never blocks a decode step.
         self.residency = residency
         self.residency_budget = residency_budget
-        self.residency_turns = 0
         if residency is not None:
             residency.auto_enforce = False
-        # prefill-reuse accounting (PrefixCache)
-        self.prefills = 0
-        self.prefills_reused = 0
 
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len)
         )
         self._decode = jax.jit(model.decode)
+
+    # ------------------------------------------------------------------
+    # registry-backed legacy counters (attribute back-compat)
+    # ------------------------------------------------------------------
+    @property
+    def steps(self) -> int:
+        return self._m_steps.value
+
+    @property
+    def decoded_tokens(self) -> int:
+        return self._m_decoded.value
+
+    @property
+    def occupancy_sum(self) -> float:
+        return self._m_occupancy.value
+
+    @property
+    def prefills(self) -> int:
+        return self._m_prefills.value
+
+    @property
+    def prefills_reused(self) -> int:
+        return self._m_prefills_reused.value
+
+    @property
+    def ingest_batches(self) -> int:
+        return self._m_ingest_batches.value
+
+    @property
+    def ingest_sessions(self) -> int:
+        return self._m_ingest_sessions.value
+
+    @property
+    def query_batches(self) -> int:
+        return self._m_query_batches.value
+
+    @property
+    def queries_served(self) -> int:
+        return self._m_queries_served.value
+
+    @property
+    def maintenance_turns(self) -> int:
+        return self._m_maintenance_turns.value
+
+    @property
+    def residency_turns(self) -> int:
+        return self._m_residency_turns.value
 
     # ------------------------------------------------------------------
     def submit(self, prompt_tokens: List[int], max_new_tokens: int = 8,
@@ -208,7 +277,7 @@ class ServeEngine:
                     "tenant= requires a ResidencyManager (residency=)")
         elif self.memory is None:
             raise RuntimeError("ServeEngine was built without a memory system")
-        self.ingest_queue.append((tenant, session))
+        self.ingest_queue.append((tenant, session, time.perf_counter()))
 
     def _memory_lock(self):
         """Forest-access guard: the maintenance plane's lock when one is
@@ -229,21 +298,25 @@ class ServeEngine:
             return 0
         batch = self.ingest_queue[: self.max_ingest_batch]
         del self.ingest_queue[: len(batch)]
-        groups: Dict[Optional[str], List] = {}
-        for tenant, session in batch:
-            groups.setdefault(tenant, []).append(session)
-        for tenant, sessions in groups.items():
-            if tenant is not None:
-                self.residency.ingest(tenant, sessions)
-                self.ingest_batches += 1
-                continue
-            with self._memory_lock():
-                if self.maintenance is not None:
-                    self.memory.ingest_batch(sessions, defer_flush=True)
-                else:
-                    self.memory.ingest_batch(sessions)
-            self.ingest_batches += 1
-        self.ingest_sessions += len(batch)
+        with self.obs.span("engine.drain.ingest", sessions=len(batch)):
+            groups: Dict[Optional[str], List] = {}
+            for tenant, session, _t in batch:
+                groups.setdefault(tenant, []).append(session)
+            for tenant, sessions in groups.items():
+                if tenant is not None:
+                    self.residency.ingest(tenant, sessions)
+                    self._m_ingest_batches.inc()
+                    continue
+                with self._memory_lock():
+                    if self.maintenance is not None:
+                        self.memory.ingest_batch(sessions, defer_flush=True)
+                    else:
+                        self.memory.ingest_batch(sessions)
+                self._m_ingest_batches.inc()
+        now = time.perf_counter()
+        for _tenant, _session, t in batch:
+            self._h_ingest_wait.record(now - t)
+        self._m_ingest_sessions.inc(len(batch))
         return len(batch)
 
     def submit_query(self, query, *, mode: Optional[str] = None,
@@ -261,7 +334,8 @@ class ServeEngine:
             raise RuntimeError("ServeEngine was built without a memory system")
         rid = self._next_id
         self._next_id += 1
-        self.query_queue.append((rid, tenant, query, mode, final_topk))
+        self.query_queue.append((rid, tenant, query, mode, final_topk,
+                                 time.perf_counter()))
         return rid
 
     def pop_query_result(self, req_id: int):
@@ -280,21 +354,26 @@ class ServeEngine:
             return 0
         batch = self.query_queue[: self.max_query_batch]
         del self.query_queue[: len(batch)]
-        groups: Dict[Tuple, List] = {}
-        for rid, tenant, q, mode, topk in batch:
-            groups.setdefault((tenant, mode, topk), []).append((rid, q))
-        for (tenant, mode, topk), items in groups.items():
-            if tenant is not None:
-                res = self.residency.query_batch(
-                    tenant, [q for _, q in items], mode=mode, final_topk=topk)
-            else:
-                with self._memory_lock():
-                    res = self.memory.query_batch(
-                        [q for _, q in items], mode=mode, final_topk=topk)
-            for (rid, _q), r in zip(items, res):
-                self.query_results[rid] = r
-            self.query_batches += 1
-        self.queries_served += len(batch)
+        with self.obs.span("engine.drain.query", queries=len(batch)):
+            groups: Dict[Tuple, List] = {}
+            for rid, tenant, q, mode, topk, _t in batch:
+                groups.setdefault((tenant, mode, topk), []).append((rid, q))
+            for (tenant, mode, topk), items in groups.items():
+                if tenant is not None:
+                    res = self.residency.query_batch(
+                        tenant, [q for _, q in items], mode=mode,
+                        final_topk=topk)
+                else:
+                    with self._memory_lock():
+                        res = self.memory.query_batch(
+                            [q for _, q in items], mode=mode, final_topk=topk)
+                for (rid, _q), r in zip(items, res):
+                    self.query_results[rid] = r
+                self._m_query_batches.inc()
+        now = time.perf_counter()
+        for rec in batch:
+            self._h_query_wait.record(now - rec[5])
+        self._m_queries_served.inc(len(batch))
         return len(batch)
 
     # ------------------------------------------------------------------
@@ -333,12 +412,15 @@ class ServeEngine:
         pkey = pkeys.pop() if len(pkeys) == 1 else None
         sig = (tuple(admitted_slots), toks.tobytes()) if pkey is not None else None
         hit = self.prefix_cache.get(pkey, sig) if pkey is not None else None
-        self.prefills += 1
+        self._m_prefills.inc()
         if hit is not None:
             logits, new_cache = hit
-            self.prefills_reused += 1
+            self._m_prefills_reused.inc()
         else:
-            logits, new_cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+            with self.obs.span("engine.prefill", slots=len(admitted_slots),
+                               width=int(L)):
+                logits, new_cache = self._prefill(
+                    self.params, {"tokens": jnp.asarray(toks)})
             if pkey is not None:
                 self.prefix_cache.put(pkey, sig, logits, new_cache)
 
@@ -363,42 +445,49 @@ class ServeEngine:
     def step(self) -> int:
         """One engine iteration: admit + one decode step for all active,
         then one ingest-lane and one query-lane drain. Returns number of
-        finished decode requests."""
-        self._admit()
-        act = [a for a in self.active if a is not None]
-        if not act:
+        finished decode requests. Every phase (admit incl. prefill, decode,
+        the four drains) runs under its own span, so enabling tracing yields
+        a per-phase latency distribution (``span/engine.*`` histograms)."""
+        with self.obs.span("engine.step"):
+            with self.obs.span("engine.admit"):
+                self._admit()
+            act = [a for a in self.active if a is not None]
+            if not act:
+                self._drain_ingest()
+                self._drain_queries()
+                self._drain_maintenance()
+                self._drain_residency()
+                return 0
+            self._m_occupancy.inc(len(act) / self.max_batch)
+            self._m_steps.inc()
+
+            with self.obs.span("engine.decode", lanes=len(act)):
+                # greedy next token from last logits
+                next_tok = np.asarray(jnp.argmax(self._last_logits, axis=-1))
+                for i, a in enumerate(self.active):
+                    if a is None:
+                        continue
+                    a.out_tokens.append(int(next_tok[i]))
+                    self._m_decoded.inc()
+                batch = {"tokens": jnp.asarray(next_tok.astype(np.int32))}
+                self._last_logits, self.cache = self._decode(
+                    self.params, batch, self.cache)
+
+            finished = 0
+            for i, a in enumerate(self.active):
+                if a is None:
+                    continue
+                if len(a.out_tokens) >= a.max_new_tokens or a.out_tokens[-1] == self.eos_id:
+                    a.finished_s = time.perf_counter()
+                    self._h_decode_request.record(a.finished_s - a.submitted_s)
+                    self.finished.append(a)
+                    self.active[i] = None
+                    finished += 1
             self._drain_ingest()
             self._drain_queries()
             self._drain_maintenance()
             self._drain_residency()
-            return 0
-        self.occupancy_sum += len(act) / self.max_batch
-        self.steps += 1
-
-        # greedy next token from last logits
-        next_tok = np.asarray(jnp.argmax(self._last_logits, axis=-1))
-        finished = 0
-        for i, a in enumerate(self.active):
-            if a is None:
-                continue
-            a.out_tokens.append(int(next_tok[i]))
-            self.decoded_tokens += 1
-        batch = {"tokens": jnp.asarray(next_tok.astype(np.int32))}
-        self._last_logits, self.cache = self._decode(self.params, batch, self.cache)
-
-        for i, a in enumerate(self.active):
-            if a is None:
-                continue
-            if len(a.out_tokens) >= a.max_new_tokens or a.out_tokens[-1] == self.eos_id:
-                a.finished_s = time.perf_counter()
-                self.finished.append(a)
-                self.active[i] = None
-                finished += 1
-        self._drain_ingest()
-        self._drain_queries()
-        self._drain_maintenance()
-        self._drain_residency()
-        return finished
+            return finished
 
     def _drain_maintenance(self) -> int:
         """One maintenance-lane turn: a bounded slice of refresh/compaction/
@@ -406,9 +495,12 @@ class ServeEngine:
         budget 0, or when no plane is attached)."""
         if self.maintenance is None or self.maintenance_budget <= 0:
             return 0
-        done = self.maintenance.run_some(self.maintenance_budget)["units"]
+        if self.maintenance.pending() == 0:
+            return 0
+        with self.obs.span("engine.drain.maintenance"):
+            done = self.maintenance.run_some(self.maintenance_budget)["units"]
         if done:
-            self.maintenance_turns += 1
+            self._m_maintenance_turns.inc()
         return done
 
     def _drain_residency(self) -> int:
@@ -418,9 +510,12 @@ class ServeEngine:
         blocking it — the residency twin of the maintenance drain."""
         if self.residency is None or self.residency_budget <= 0:
             return 0
-        done = self.residency.enforce_budget(self.residency_budget)
+        if self.residency.over_budget() == 0:
+            return 0
+        with self.obs.span("engine.drain.residency"):
+            done = self.residency.enforce_budget(self.residency_budget)
         if done:
-            self.residency_turns += 1
+            self._m_residency_turns.inc()
         return done
 
     # ------------------------------------------------------------------
@@ -442,29 +537,46 @@ class ServeEngine:
         return self.finished
 
     def metrics(self) -> Dict[str, float]:
+        """Legacy flat metrics dict, now REPORTED THROUGH the registry: every
+        counter below is a ``serve/*`` registry counter (the properties read
+        them back), so ``engine.obs.registry.snapshot()`` and this dict can
+        never disagree (tests/test_obs.py metric-coherence test)."""
+        steps = self._m_steps.value
         return {
-            "decode_steps": self.steps,
-            "decoded_tokens": self.decoded_tokens,
-            "mean_occupancy": self.occupancy_sum / max(self.steps, 1),
+            "decode_steps": steps,
+            "decoded_tokens": self._m_decoded.value,
+            "mean_occupancy": self._m_occupancy.value / max(steps, 1),
             "prefix_hits": self.prefix_cache.hits,
             "prefix_misses": self.prefix_cache.misses,
-            "prefills": self.prefills,
-            "prefills_reused": self.prefills_reused,
-            "ingest_batches": self.ingest_batches,
-            "ingest_sessions": self.ingest_sessions,
-            "mean_ingest_batch": self.ingest_sessions / max(self.ingest_batches, 1),
-            "query_batches": self.query_batches,
-            "queries_served": self.queries_served,
-            "mean_query_batch": self.queries_served / max(self.query_batches, 1),
-            "maintenance_turns": self.maintenance_turns,
-            "residency_turns": self.residency_turns,
+            "prefills": self._m_prefills.value,
+            "prefills_reused": self._m_prefills_reused.value,
+            "ingest_batches": self._m_ingest_batches.value,
+            "ingest_sessions": self._m_ingest_sessions.value,
+            "mean_ingest_batch": self._m_ingest_sessions.value
+            / max(self._m_ingest_batches.value, 1),
+            "query_batches": self._m_query_batches.value,
+            "queries_served": self._m_queries_served.value,
+            "mean_query_batch": self._m_queries_served.value
+            / max(self._m_query_batches.value, 1),
+            "maintenance_turns": self._m_maintenance_turns.value,
+            "residency_turns": self._m_residency_turns.value,
             "serve_devices": (self.serve_mesh.devices.size
                               if self.serve_mesh is not None else 1),
+            # per-request wait distributions (additive keys, seconds)
+            "ingest_wait_p50_s": self._h_ingest_wait.quantile(0.5),
+            "ingest_wait_p99_s": self._h_ingest_wait.quantile(0.99),
+            "query_wait_p50_s": self._h_query_wait.quantile(0.5),
+            "query_wait_p99_s": self._h_query_wait.quantile(0.99),
             **(self.maintenance.metrics() if self.maintenance is not None else {}),
             # hot_tenants / evictions / rehydrations / digest_answers /
             # device_bytes(_est) ride straight into the engine metrics dict
             **(self.residency.metrics() if self.residency is not None else {}),
         }
+
+    def latency_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-phase span-duration summaries (populated while tracing is
+        enabled): {span name: {count, mean_s, p50_s, p90_s, p99_s, ...}}."""
+        return self.obs.registry.latency_summary()
 
 
 class BatchedEncoderServer:

@@ -602,3 +602,50 @@ def test_plane_background_thread_mode(wl):
     assert not mf.forest.dirty_trees
     assert plane.units_run > 0
     assert [r.answer for r in mf.query_batch(wl.queries)] == want
+
+
+def test_crash_injector_events_ride_trace_sink(tmp_path, wl, merge_wl):
+    """Every durability tick mirrors into the trace sink as a
+    ``durability/<event>`` point event — in the exact order of the legacy
+    ``probe.trace`` list — and snapshot-protocol events nest under their
+    ``journal.checkpoint`` span, so crash sweeps can assert span-level
+    ordering straight from the trace."""
+    from repro import obs as obs_mod
+    from repro.obs import Observability
+
+    sink = obs_mod.MemorySink()
+    obs_mod.enable_tracing(sink)
+    try:
+        probe = CrashInjector(None, obs=Observability())
+        store = DurableMemForest.open(str(tmp_path / "t"), crash=probe,
+                                      snapshot_every=2)
+        for op in _plan(wl, merge_wl):
+            _apply(store, op)
+        store.checkpoint()
+        store.close()
+    finally:
+        obs_mod.disable_tracing()
+
+    evs = sink.events("durability/")
+    # the sink saw the full legacy trace, same events, same order
+    assert [e["name"] for e in evs] == ["durability/" + t for t in probe.trace]
+    assert [e["attrs"]["n"] for e in evs] == list(range(1, probe.events + 1))
+    ts = [e["ts"] for e in evs]
+    assert ts == sorted(ts)
+
+    # snapshot protocol events are parented to a journal.checkpoint span
+    ckpt_ids = {r["span"] for r in sink.spans("journal.checkpoint")}
+    assert ckpt_ids
+    by_name = {}
+    for e in evs:
+        by_name.setdefault(e["name"], []).append(e)
+    for name in ("durability/snapshot:begin", "durability/snapshot:commit",
+                 "durability/journal:rotate"):
+        assert by_name[name], name
+        assert all(e["span"] in ckpt_ids for e in by_name[name]), name
+    # per-checkpoint protocol order: begin -> commit -> rotate
+    for b, c, r in zip(by_name["durability/snapshot:begin"],
+                       by_name["durability/snapshot:commit"],
+                       by_name["durability/journal:rotate"]):
+        assert b["span"] == c["span"] == r["span"]
+        assert b["ts"] < c["ts"] < r["ts"]
