@@ -1,0 +1,24 @@
+"""memlint: repo-specific static analysis + dynamic lock-order checking.
+
+The serve stack's invariants (deterministic top-k tie-break, fsync-after-
+rename, journaled persistent-state mutation, replay determinism, span
+discipline, kernel/ref parity, no host sync in the decode loop) live here
+as enforced rules instead of review lore:
+
+  * ``python -m repro.analysis src/ --strict`` — the AST sweep
+    (repro/analysis/rules.py; engine in repro/analysis/core.py).
+  * ``repro.analysis.lockcheck`` — an instrumented Lock wrapper that
+    records the cross-thread lock-acquisition graph, flags cycles (the
+    deadlock precondition) and lock-held blocking calls; driven by
+    tests/test_lockcheck.py under concurrent engine + maintenance +
+    residency traffic.
+
+See README "Static analysis" and docs/INVARIANTS.md.
+"""
+from repro.analysis.core import (Finding, RULES, Rule, SweepResult,
+                                 find_repo_root, load_baseline, rule,
+                                 run_paths, write_baseline)
+from repro.analysis import rules as _rules  # noqa: F401  (registers rules)
+
+__all__ = ["Finding", "RULES", "Rule", "SweepResult", "find_repo_root",
+           "load_baseline", "rule", "run_paths", "write_baseline"]

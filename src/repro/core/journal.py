@@ -376,6 +376,13 @@ class DurableMemForest:
     def close(self) -> None:
         self.writer.close()
 
+    def __enter__(self) -> "DurableMemForest":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     # -- recovery ----------------------------------------------------------
     @classmethod
     def open(cls, root_dir: str, *, config=None, encoder=None,

@@ -143,8 +143,14 @@ class MaintenancePlane:
         if self._merge_q:
             src, key = self._merge_q.popleft()
             with self.obs.span("maintenance.merge"):
-                maintenance.migrate_merge(self.forest, src,
-                                          idempotency_key=key, flush=False)
+                if self.durable is not None:
+                    # ride the journal: a crash mid-merge must replay it
+                    self.durable.merge_from(src, idempotency_key=key,
+                                            flush=False)
+                else:
+                    # non-durable deployment — there is no journal to ride
+                    maintenance.migrate_merge(self.forest, src,  # memlint: ignore[journaled-mutation]
+                                              idempotency_key=key, flush=False)
             self._m_merges.inc()
             return True
         if self._compact_q:
@@ -154,7 +160,8 @@ class MaintenancePlane:
                     if self.durable is not None:
                         stats = self.durable.compact_tree(scope)
                     else:
-                        stats = maintenance.compact_tree(self.forest, scope)
+                        # non-durable deployment — no journal to ride
+                        stats = maintenance.compact_tree(self.forest, scope)  # memlint: ignore[journaled-mutation]
                 self._m_reclaimed.inc(stats["slots_reclaimed"])
                 self._m_compactions.inc()
             return True

@@ -172,10 +172,15 @@ class MemForestSystem:
     # ------------------------------------------------------------------
     def merge_from(self, other: "MemForestSystem", *,
                    idempotency_key: Optional[str] = None) -> Dict[str, int]:
+        # in-memory facade: DurableMemForest overrides this with the
+        # journaled op; callers holding a durable handle never reach here
+        # memlint: ignore[journaled-mutation]
         return maintenance.migrate_merge(self.forest, other.forest,
                                          idempotency_key=idempotency_key)
 
     def delete_session(self, session_id: str) -> Dict[str, int]:
+        # in-memory facade: journaled counterpart lives on DurableMemForest
+        # memlint: ignore[journaled-mutation]
         return maintenance.delete_session(self.forest, session_id)
 
     def scale_stats(self) -> Dict[str, int]:

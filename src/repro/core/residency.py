@@ -467,6 +467,13 @@ class ResidencyManager:
                     t.store.close()
                     t.store = None
 
+    def __enter__(self) -> "ResidencyManager":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     # ------------------------------------------------------------------
     # digest gate
     # ------------------------------------------------------------------

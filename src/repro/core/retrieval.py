@@ -328,7 +328,7 @@ class Retriever:
                 if lane.intent is not None:
                     sims = sims + self._intent_bonus(lane.tree, kids,
                                                      lane.intent, lane.q_words)
-                top = np.argsort(-sims)[:budget]
+                top = np.argsort(-sims, kind="stable")[:budget]
                 lane.next_beam.extend((kids[i], float(sims[i])) for i in top)
             for lane in active:
                 agg: Dict[int, float] = {}

@@ -20,7 +20,8 @@ def load(out_dir: str) -> List[Dict]:
     rows = []
     for f in sorted(os.listdir(out_dir)):
         if f.endswith(".json"):
-            rows.append(json.load(open(os.path.join(out_dir, f))))
+            with open(os.path.join(out_dir, f)) as fh:
+                rows.append(json.load(fh))
     return rows
 
 

@@ -27,15 +27,23 @@ from typing import Dict, List, Optional, Sequence
 
 
 class Counter:
-    """Monotonic (float-friendly) counter. ``value`` is the read API."""
+    """Monotonic (float-friendly) counter. ``value`` is the read API.
 
-    __slots__ = ("value",)
+    ``inc`` takes a per-instance lock: ``self.value += n`` is a read-
+    modify-write that the GIL does NOT make atomic (the interpreter can
+    switch threads between the load and the store), and counters are
+    incremented from the serve thread and the maintenance worker at once.
+    """
+
+    __slots__ = ("value", "_lock")
 
     def __init__(self) -> None:
         self.value = 0
+        self._lock = threading.Lock()
 
     def inc(self, n=1) -> None:
-        self.value += n
+        with self._lock:
+            self.value += n
 
     def set(self, v) -> None:
         self.value = v
@@ -67,7 +75,7 @@ class LatencyHistogram:
     GROWTH = 1.05
     _BUCKETS = 1 + int(math.log(1e4 / MIN) / math.log(GROWTH)) + 1   # ..1e4 s
 
-    __slots__ = ("count", "sum", "max", "_b", "_inv_log_growth")
+    __slots__ = ("count", "sum", "max", "_b", "_inv_log_growth", "_lock")
 
     def __init__(self) -> None:
         self.count = 0
@@ -75,19 +83,23 @@ class LatencyHistogram:
         self.max = 0.0
         self._b: List[int] = [0] * self._BUCKETS
         self._inv_log_growth = 1.0 / math.log(self.GROWTH)
+        # record() updates four fields; without the lock a thread switch
+        # mid-update loses counts or leaves count/sum inconsistent
+        self._lock = threading.Lock()
 
     def record(self, seconds: float) -> None:
-        self.count += 1
-        self.sum += seconds
-        if seconds > self.max:
-            self.max = seconds
         if seconds < self.MIN:
             idx = 0
         else:
             idx = 1 + int(math.log(seconds / self.MIN) * self._inv_log_growth)
             if idx >= len(self._b):
                 idx = len(self._b) - 1
-        self._b[idx] += 1
+        with self._lock:
+            self.count += 1
+            self.sum += seconds
+            if seconds > self.max:
+                self.max = seconds
+            self._b[idx] += 1
 
     def quantile(self, q: float) -> float:
         """Approximate q-quantile (q in [0, 1]) in seconds; 0.0 when empty."""
@@ -157,20 +169,30 @@ class MetricsRegistry:
         return h
 
     # ------------------------------------------------------------------
+    # Read methods copy the name->object dicts under the registration lock
+    # before iterating: the maintenance worker registers metrics lazily, so
+    # a lock-free iteration from the serve thread can hit "dict changed
+    # size during iteration" mid-snapshot.
     def counters(self) -> Dict[str, float]:
-        return {k: c.value for k, c in sorted(self._counters.items())}
+        with self._lock:
+            items = sorted(self._counters.items())
+        return {k: c.value for k, c in items}
 
     def histograms(self) -> Dict[str, LatencyHistogram]:
-        return dict(self._hists)
+        with self._lock:
+            return dict(self._hists)
 
     def snapshot(self) -> Dict[str, float]:
         """One flat dict of everything: counters and gauges by name,
         histograms expanded to ``<name>/{count,mean_s,p50_s,p90_s,p99_s}``."""
+        with self._lock:
+            gauges = sorted(self._gauges.items())
+            hists = sorted(self._hists.items())
         out: Dict[str, float] = {}
         out.update(self.counters())
-        for k, g in sorted(self._gauges.items()):
+        for k, g in gauges:
             out[k] = g.value
-        for k, h in sorted(self._hists.items()):
+        for k, h in hists:
             for stat, v in h.summary().items():
                 out[f"{k}/{stat}"] = v
         return out
@@ -179,9 +201,10 @@ class MetricsRegistry:
         """Per-histogram summaries for names under ``prefix`` (default: the
         span-duration histograms) — the per-phase p50/p99 table the mixed
         serving benchmark emits."""
+        with self._lock:
+            hists = sorted(self._hists.items())
         return {k[len(prefix):]: h.summary()
-                for k, h in sorted(self._hists.items())
-                if k.startswith(prefix) and h.count}
+                for k, h in hists if k.startswith(prefix) and h.count}
 
 
 def percentiles(samples: Sequence[float],

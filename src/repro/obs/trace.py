@@ -214,10 +214,13 @@ class Tracer:
         self._emit_event(name, cur.span_id if cur else None, attrs)
 
     def _emit_event(self, name: str, span_id, attrs) -> None:
-        if self.sink is not None:
-            self.sink.write({"kind": "event", "name": name, "span": span_id,
-                             "ts": perf_counter() - self.t0,
-                             "attrs": attrs or {}})
+        # capture: disable() on another thread nulls self.sink between the
+        # check and the write otherwise
+        sink = self.sink
+        if sink is not None:
+            sink.write({"kind": "event", "name": name, "span": span_id,
+                        "ts": perf_counter() - self.t0,
+                        "attrs": attrs or {}})
 
     # -- switches ----------------------------------------------------------
     def enable(self, sink=None) -> "Tracer":
@@ -229,9 +232,9 @@ class Tracer:
 
     def disable(self) -> None:
         self.enabled = False
-        if self.sink is not None:
-            self.sink.flush()
-        self.sink = None
+        sink, self.sink = self.sink, None
+        if sink is not None:
+            sink.flush()
 
 
 #: process-wide default tracer — components fall back to this one, so

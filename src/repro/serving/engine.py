@@ -463,6 +463,9 @@ class ServeEngine:
 
             with self.obs.span("engine.decode", lanes=len(act)):
                 # greedy next token from last logits
+                # the one sanctioned sync: greedy sampling must read the
+                # token ids before Python can append them to lane buffers
+                # memlint: ignore[host-sync]
                 next_tok = np.asarray(jnp.argmax(self._last_logits, axis=-1))
                 for i, a in enumerate(self.active):
                     if a is None:

@@ -47,3 +47,38 @@ def test_batched_accuracy(built):
     acc = sum(int(r.answer.strip().lower() == q.gold.strip().lower())
               for r, q in zip(res, wl.queries)) / len(wl.queries)
     assert acc >= 0.8, acc
+
+
+def test_browse_beam_tie_break_prefers_lowest_child_index():
+    """Equal browse scores must resolve to the LOWEST child ids (stable
+    argsort) — regression for the unstable `np.argsort(-sims)` the memlint
+    topk-tiebreak rule caught in the lane browse; an unstable sort makes
+    beam membership an implementation detail of the sort algorithm, which
+    is exactly what broke exact mesh/single-device parity before PR 7."""
+    import numpy as np
+
+    from repro.core.memtree import TreeArena
+    from repro.core.retrieval import Retriever, _Lane
+
+    cfg = MemForestConfig()
+    tree = TreeArena(0, "t", "entity", 4, cfg.embed_dim)
+    v = np.zeros(cfg.embed_dim, np.float32)
+    v[0] = 1.0
+    leaves = [tree._alloc(0, (0.0, 1.0), text=f"leaf{i}", emb=v)
+              for i in range(6)]              # identical embeddings: all tie
+    root = tree._alloc(1, (0.0, 1.0), text="root", emb=v)
+    tree.children[root] = list(leaves)
+    for leaf in leaves:
+        tree.parent[leaf] = root
+    tree.root = root
+
+    class _FlatForest:
+        mesh = None
+        mesh_axis = None
+        kernel_impl = "reference"
+
+    r = Retriever(_FlatForest(), encoder=None, config=cfg)
+    lane = _Lane(0, tree, v, None, q_words=set())
+    r._browse_lanes([lane])
+    assert set(lane.collected) == set(leaves[:cfg.browse_beam]), \
+        "tied scores must keep ascending child-id order"

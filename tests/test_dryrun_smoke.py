@@ -27,7 +27,8 @@ def test_smoke_dryrun_single_mesh(arch, tmp_path):
     r = _run_dryrun(["--smoke", "--arch", arch, "--shape", "train_4k",
                      "--mesh", "single", "--out", str(tmp_path)])
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
-    data = json.load(open(tmp_path / f"{arch}__train_4k__single.json"))
+    with open(tmp_path / f"{arch}__train_4k__single.json") as fh:
+        data = json.load(fh)
     assert data["ok"]
     assert data["roofline"]["hlo_flops_total"] > 0
 
@@ -36,7 +37,8 @@ def test_smoke_dryrun_multipod_decode(tmp_path):
     r = _run_dryrun(["--smoke", "--arch", "llama3_8b", "--shape", "decode_32k",
                      "--mesh", "multi", "--out", str(tmp_path)])
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
-    data = json.load(open(tmp_path / f"llama3_8b__decode_32k__multi.json"))
+    with open(tmp_path / f"llama3_8b__decode_32k__multi.json") as fh:
+        data = json.load(fh)
     assert data["ok"]
     assert data["mesh_shape"] == [2, 2, 2]
 

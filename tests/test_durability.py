@@ -649,3 +649,27 @@ def test_crash_injector_events_ride_trace_sink(tmp_path, wl, merge_wl):
                        by_name["durability/journal:rotate"]):
         assert b["span"] == c["span"] == r["span"]
         assert b["ts"] < c["ts"] < r["ts"]
+
+
+def test_plane_merge_rides_durable_journal(tmp_path, wl, merge_wl):
+    """A plane built with durable= routes queued merges through the
+    journaled op (regression: memlint rule journaled-mutation caught the
+    plane calling maintenance.migrate_merge directly, which a crash right
+    after the drain would silently un-apply)."""
+    root = str(tmp_path / "store")
+    store = DurableMemForest(MemForestSystem(MemForestConfig()), root)
+    store.ingest_batch(wl.sessions, idempotency_key="i")
+    plane = MaintenancePlane(store.forest, durable=store)
+    plane.schedule_merge(_build(merge_wl.sessions), idempotency_key="pm")
+    plane.drain()
+    assert plane.merges_done == 1
+    recs = read_journal(os.path.join(root, JOURNAL_NAME))
+    assert any(r["op"] == "migrate_merge" and r["key"] == "pm" for r in recs)
+    assert "pm" in store.forest.applied_ops
+    want = store.state_digest()
+    store.close()
+
+    rec = DurableMemForest.open(root)      # the merge survives recovery
+    assert rec.state_digest() == want
+    assert "pm" in rec.forest.applied_ops  # retries still dedup
+    rec.close()

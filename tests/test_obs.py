@@ -262,3 +262,146 @@ def test_forest_flush_and_journal_spans_share_system_registry(tmp_path):
     append_ids = {r["span"] for r in sink.spans("journal.append")}
     for r in sink.spans("journal.fsync"):
         assert r["parent"] in append_ids
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# thread-safety under the background maintenance plane (ISSUE 10 satellite):
+# counters/histograms are written from the serve thread AND the plane's
+# worker at once, and snapshots race lazy registration
+# ---------------------------------------------------------------------------
+def test_counter_and_histogram_are_thread_safe_under_contention():
+    """`value += n` is a read-modify-write the GIL does not make atomic;
+    with a tiny switch interval the unlocked version loses increments
+    within a handful of runs. The locked primitives must count exactly."""
+    import sys
+    import threading
+
+    reg = MetricsRegistry()
+    c = reg.counter("stress/c")
+    h = reg.histogram("stress/h")
+    n_threads, n_iters = 8, 2000
+
+    def worker(tid):
+        for i in range(n_iters):
+            c.inc()
+            h.record(1e-4 * (1 + (i + tid) % 7))
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-6)
+    try:
+        ts = [threading.Thread(target=worker, args=(t,))
+              for t in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+
+    assert c.value == n_threads * n_iters
+    assert h.count == n_threads * n_iters
+    assert h.summary()["count"] == n_threads * n_iters
+    # bucket totals agree with count: no torn record() left them skewed
+    assert sum(h._b) == h.count
+
+
+def test_registry_get_or_create_race_yields_one_instance():
+    """Concurrent get-or-create of the SAME name from many threads must
+    converge on one object — otherwise two components increment different
+    counters under one name and the snapshot under-reports."""
+    import sys
+    import threading
+
+    reg = MetricsRegistry()
+    got = []
+
+    def worker():
+        for i in range(300):
+            got.append((i, reg.counter(f"race/c{i}")))
+            reg.histogram(f"race/h{i}")
+            reg.gauge(f"race/g{i}")
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-6)
+    try:
+        ts = [threading.Thread(target=worker) for _ in range(6)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+
+    by_name = {}
+    for i, cnt in got:
+        by_name.setdefault(i, set()).add(id(cnt))
+    assert all(len(ids) == 1 for ids in by_name.values())
+
+
+def test_snapshot_during_concurrent_registration_never_raises():
+    """snapshot()/counters()/latency_summary() iterate the registry dicts
+    while the maintenance worker is still registering new metrics lazily;
+    unlocked iteration dies with 'dict changed size during iteration'."""
+    import threading
+
+    reg = MetricsRegistry()
+    stop = threading.Event()
+    errors = []
+
+    def registrar():
+        # fresh counter/gauge names keep the dicts growing (the iteration
+        # race needs live insertions); histograms cycle over a small set so
+        # snapshot()'s per-histogram summary cost stays bounded
+        i = 0
+        while not stop.is_set() and i < 20000:
+            reg.counter(f"reg/c{i}").inc()
+            reg.histogram(f"span/h{i % 32}").record(1e-3)
+            reg.gauge(f"reg/g{i}").set(i)
+            i += 1
+
+    def snapshotter():
+        try:
+            for _ in range(150):
+                reg.snapshot()
+                reg.counters()
+                reg.histograms()
+                reg.latency_summary()
+        except RuntimeError as e:          # pragma: no cover - the bug
+            errors.append(e)
+
+    reg_t = threading.Thread(target=registrar)
+    snap_t = threading.Thread(target=snapshotter)
+    reg_t.start()
+    snap_t.start()
+    snap_t.join()
+    stop.set()
+    reg_t.join()
+    assert not errors
+
+
+def test_tracer_event_races_disable_without_crashing():
+    """Tracer.disable() nulls the sink from one thread while another is
+    mid `_emit_event`; the emit path must capture the sink once (no
+    check-then-act on self.sink)."""
+    import threading
+
+    from repro.obs.trace import Tracer
+
+    errors = []
+
+    def hammer(tr):
+        try:
+            for _ in range(300):
+                tr.event("e", {"k": 1})
+        except AttributeError as e:        # pragma: no cover - the bug
+            errors.append(e)
+
+    for _ in range(30):
+        tr = Tracer()
+        tr.enable(MemorySink())
+        t = threading.Thread(target=hammer, args=(tr,))
+        t.start()
+        tr.disable()
+        t.join()
+    assert not errors
